@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: environment, CSV rows, timing."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from repro.core.evaluator import Evaluator
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.core.plan import HARDWARE, QWEN25_FAMILY
+from repro.core.policy import render_policy, seed_policies
+from repro.core.simulator import Simulator
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+Row = Tuple[str, float, str]        # (name, us_per_call, derived)
+
+
+def env() -> Tuple[Simulator, Evaluator]:
+    models = {m.name: m for m in QWEN25_FAMILY.values()}
+    sim = Simulator(models, HARDWARE)
+    ev = Evaluator(sim, models, HARDWARE, candidate_timeout_s=45.0)
+    return sim, ev
+
+
+def evolve(ev: Evaluator, trace, iters: int = 30, seed: int = 0,
+           warm_start=None, timeout_s: float = 150.0):
+    evo = Evolution(ev, EvolutionConfig(
+        max_iterations=iters, patience=iters, evolution_timeout_s=timeout_s,
+        seed=seed))
+    return evo.run(trace, warm_start=warm_start)
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.monotonic()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.monotonic() - t0) / repeat
+    return out, dt * 1e6            # microseconds
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def save_json(name: str, payload) -> None:
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                       default=str))
+
+
+BASELINE_POLICIES = {
+    "greedy": {"scheduler": "greedy", "trigger_kind": "always"},
+    "ilp": {"scheduler": "bnb", "time_budget": 30.0,
+            "batch_scheme": "exhaustive", "allow_split": True,
+            "trigger_kind": "threshold", "shift_threshold": 5.0},
+    "full-migration": {"scheduler": "bnb", "time_budget": 5.0,
+                       "batch_scheme": "sweet", "allow_split": True,
+                       "trigger_kind": "always"},
+    "minimal-migration": {"scheduler": "greedy", "trigger_kind": "threshold",
+                          "shift_threshold": 9.9,
+                          "migration_keep_threshold": 4.0,
+                          "reconfig_penalty": 8.0},
+}
+
+
+def baseline(name: str):
+    return render_policy(BASELINE_POLICIES[name], name=name)

@@ -1,0 +1,38 @@
+"""Figure 8 — evolution convergence on volatile vs stable periods (multiple
+seeds; scores normalised by the initial score)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, env, evolve, save_json
+from repro.traces import stable_workload_trace, volatile_workload_trace
+
+
+def run() -> list:
+    sim, ev = env()
+    rows: list = []
+    payload = {}
+    for trace in (volatile_workload_trace(), stable_workload_trace()):
+        curves = []
+        for seed in (0, 1, 2):
+            state = evolve(ev, trace, iters=40, seed=seed, timeout_s=200)
+            hist = [f for _, f in state.history]
+            init = hist[0]
+            curves.append([f / init for f in hist])
+            rows.append((
+                f"fig8/{trace.name}/seed{seed}", 0.0,
+                f"init={init:.1f} final={hist[-1]:.1f} "
+                f"norm={hist[-1] / init:.3f} iters={len(hist) - 1}"))
+        # convergence iteration: first iter within 1% of final
+        conv_iters = []
+        for c in curves:
+            final = c[-1]
+            conv_iters.append(next(i for i, v in enumerate(c)
+                                   if v <= final * 1.01))
+        rows.append((f"fig8/{trace.name}/mean_convergence_iter", 0.0,
+                     f"{sum(conv_iters) / len(conv_iters):.0f}"))
+        payload[trace.name] = curves
+    save_json("fig8_convergence", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

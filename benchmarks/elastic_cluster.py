@@ -1,0 +1,43 @@
+"""Table 3 — elastic cluster dynamics (§8.2): full- vs minimal-migration vs
+evolved on MAF-style volatile/stable cluster traces."""
+from __future__ import annotations
+
+from benchmarks.common import Row, baseline, emit, env, evolve, save_json
+from repro.traces.workload import elastic_cluster_traces
+
+
+def _tok(trace) -> float:
+    return sum(w.batch * (w.prefill_len + w.decode_len)
+               for o in trace.observations for w in o.workloads)
+
+
+def run() -> list:
+    sim, ev = env()
+    rows: list = []
+    payload = {}
+    for name, trace in elastic_cluster_traces().items():
+        toks = _tok(trace)
+        res = {
+            "full-migration": ev.evaluate(baseline("full-migration"), trace),
+            "minimal-migration": ev.evaluate(baseline("minimal-migration"),
+                                             trace),
+        }
+        best = evolve(ev, trace, iters=30, seed=0).best
+        res["ours"] = best.result
+        payload[name] = {k: r.artifact_feedback() for k, r in res.items()}
+        payload[name]["ours_genome"] = best.policy.genome
+        for k, r in res.items():
+            thpt = toks / r.fitness if r.valid else 0.0
+            rows.append((f"table3/{name}/{k}", r.sum_sched * 1e6,
+                         f"stale={r.sum_stale:.1f}s rc={r.sum_reconfig:.1f}s "
+                         f"T={r.fitness:.1f}s thpt={thpt:.0f}t/s"))
+        base = min(res["full-migration"].fitness,
+                   res["minimal-migration"].fitness)
+        rows.append((f"table3/{name}/improvement", 0.0,
+                     f"{(1 - res['ours'].fitness / base) * 100:.1f}% vs best baseline"))
+    save_json("table3_elastic", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

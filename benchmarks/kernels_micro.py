@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks (interpret=True on CPU — correctness-path timing;
+the TPU perf story lives in the roofline analysis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timed
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> list:
+    rows = []
+    from repro.kernels.flash_attention import ops as fa
+    q = jax.random.normal(KEY, (1, 256, 4, 64))
+    k = jax.random.normal(KEY, (1, 256, 2, 64))
+    v = jax.random.normal(KEY, (1, 256, 2, 64))
+    out, us = timed(lambda: fa.flash_attention(q, k, v).block_until_ready(),
+                    repeat=3)
+    rows.append(("kernel/flash_attention_256", us, "B1 S256 H4/2 D64"))
+
+    from repro.kernels.flash_decode import ops as fd
+    qd = jax.random.normal(KEY, (2, 8, 64))
+    kd = jax.random.normal(KEY, (2, 1024, 2, 64))
+    vd = jax.random.normal(KEY, (2, 1024, 2, 64))
+    kl = jnp.array([700, 1000])
+    out, us = timed(lambda: fd.flash_decode(qd, kd, vd, kl).block_until_ready(),
+                    repeat=3)
+    rows.append(("kernel/flash_decode_1k", us, "B2 S1024 H8/2 D64"))
+
+    from repro.kernels.rmsnorm import ops as rn
+    x = jax.random.normal(KEY, (512, 1024))
+    s = jnp.zeros((1024,))
+    out, us = timed(lambda: rn.rmsnorm(x, s).block_until_ready(), repeat=5)
+    rows.append(("kernel/rmsnorm_512x1024", us, ""))
+
+    from repro.kernels.moe_gmm import ops as mg
+    xe = jax.random.normal(KEY, (8, 128, 64)) * 0.3
+    wg = jax.random.normal(KEY, (8, 64, 256)) * 0.05
+    wu = jax.random.normal(KEY, (8, 64, 256)) * 0.05
+    wd = jax.random.normal(KEY, (8, 256, 64)) * 0.05
+    out, us = timed(lambda: mg.moe_gmm(xe, wg, wu, wd,
+                                       block_f=256).block_until_ready(),
+                    repeat=3)
+    rows.append(("kernel/moe_gmm_E8", us, "E8 C128 D64 F256"))
+
+    from repro.kernels.ssd_scan import ops as ss
+    xs = jax.random.normal(KEY, (1, 256, 4, 32)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(KEY, (1, 256, 4))) * 0.1
+    A = -jnp.exp(jax.random.normal(KEY, (4,)) * 0.3)
+    B = jax.random.normal(KEY, (1, 256, 1, 16)) * 0.3
+    C = jax.random.normal(KEY, (1, 256, 1, 16)) * 0.3
+    out, us = timed(lambda: ss.ssd_scan(xs, dt, A, B, C,
+                                        chunk=64).block_until_ready(),
+                    repeat=3)
+    rows.append(("kernel/ssd_scan_256", us, "b1 s256 h4 p32 n16"))
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

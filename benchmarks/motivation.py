@@ -1,0 +1,74 @@
+"""Figure 2 — motivation studies.
+
+Left: max-intensity (Policy A) vs min-intensity (Policy B) vs evolved oracle
+on the two-transition trace (Table 8).
+Right: steady-tuned (C) vs burst-tuned (D) vs adaptive on the L→H trace
+(Table 9).
+"""
+from __future__ import annotations
+
+from benchmarks.common import Row, baseline, emit, env, save_json, timed
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.core.policy import render_policy
+from repro.traces import motivation_trace_left, motivation_trace_right
+
+
+def _evolve_seeded(ev, trace, extra, iters=40, seed=0):
+    evo = Evolution(ev, EvolutionConfig(max_iterations=iters, patience=iters,
+                                        evolution_timeout_s=240, seed=seed))
+    return evo.run(trace, extra_seeds=extra).best
+
+
+def run() -> list:
+    sim, ev = env()
+    rows = []
+
+    # --- left: trade-off navigation ---
+    tr = motivation_trace_left()
+    # Policy A: maximum scheduling thoroughness AND reconfiguration
+    # aggressiveness at every monitoring point (sweet+split search, always
+    # migrate to the per-timestamp optimum)
+    pol_a = render_policy({"scheduler": "bnb", "time_budget": 20.0,
+                           "batch_scheme": "sweet", "allow_split": True,
+                           "weighted_obj": True,
+                           "trigger_kind": "always"}, name="policyA")
+    pol_b = baseline("greedy")                  # min intensity
+    fa, ta = timed(ev.evaluate, pol_a, tr)
+    fb, tb = timed(ev.evaluate, pol_b, tr)
+    best = _evolve_seeded(ev, tr, [pol_a, pol_b], seed=0)
+    rows += [
+        ("fig2_left/policyA_max_intensity", ta, f"T_total={fa.fitness:.1f}"),
+        ("fig2_left/policyB_min_intensity", tb, f"T_total={fb.fitness:.1f}"),
+        ("fig2_left/evolved_oracle", 0.0, f"T_total={best.fitness:.1f}"),
+        ("fig2_left/gap_vs_oracle_A", 0.0,
+         f"{(fa.fitness / best.fitness - 1) * 100:.0f}%"),
+        ("fig2_left/gap_vs_oracle_B", 0.0,
+         f"{(fb.fitness / best.fitness - 1) * 100:.0f}%"),
+    ]
+
+    # --- right: shifting trade-offs ---
+    tr2 = motivation_trace_right()
+    steady = render_policy({"scheduler": "bnb", "time_budget": 8.0,
+                            "batch_scheme": "sweet", "allow_split": True,
+                            "trigger_kind": "threshold",
+                            "shift_threshold": 2.0}, name="steady-tuned")
+    burst = render_policy({"scheduler": "greedy", "trigger_kind": "always",
+                           "reconfig_penalty": 0.0}, name="burst-tuned")
+    fc, _ = timed(ev.evaluate, steady, tr2)
+    fd, _ = timed(ev.evaluate, burst, tr2)
+    best2 = _evolve_seeded(ev, tr2, [steady, burst], seed=1)
+    rows += [
+        ("fig2_right/policyC_steady_tuned", 0.0, f"T_total={fc.fitness:.1f}"),
+        ("fig2_right/policyD_burst_tuned", 0.0, f"T_total={fd.fitness:.1f}"),
+        ("fig2_right/adaptive_evolved", 0.0, f"T_total={best2.fitness:.1f}"),
+    ]
+    save_json("fig2_motivation", {
+        "left": {"A": fa.artifact_feedback(), "B": fb.artifact_feedback(),
+                 "evolved": best.result.artifact_feedback()},
+        "right": {"C": fc.artifact_feedback(), "D": fd.artifact_feedback(),
+                  "evolved": best2.result.artifact_feedback()}})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,62 @@
+"""§Roofline — per (arch × shape × mesh) roofline terms from the compiled
+dry-run artifacts (benchmarks/artifacts/dryrun/*.json).
+
+Reads the JSON written by ``python -m repro.launch.dryrun`` — this module
+never initialises the 512-device environment itself."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import ARTIFACTS, emit, save_json
+
+DRYRUN = ARTIFACTS / "dryrun"
+
+
+def load_records(tag: str = ""):
+    recs = []
+    for p in sorted(DRYRUN.glob("*.json")):
+        parts = p.stem.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) != 3:
+            continue
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def run() -> list:
+    rows: list = []
+    if not DRYRUN.exists():
+        rows.append(("roofline/missing", 0.0,
+                     "run: PYTHONPATH=src python -m repro.launch.dryrun"))
+        return rows
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    errors = [r for r in recs if r.get("status") == "error"]
+    rows.append(("roofline/cells", 0.0,
+                 f"ok={len(ok)} skipped={len(skipped)} errors={len(errors)}"))
+    table = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        m = r["memory"]
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+            r.get("compile_s", 0.0) * 1e6,
+            f"compute={t['compute_s']:.3f}s memory={t['memory_s']:.3f}s "
+            f"collective={t['collective_s']:.3f}s dominant={t['dominant']} "
+            f"frac={t['roofline_fraction']:.3f} "
+            f"useful={t['useful_flops_ratio']:.2f} "
+            f"mem/dev={(m['argument_bytes'] + m['temp_bytes']) / 2**30:.1f}GiB"))
+        table.append({**{k: r[k] for k in ("arch", "shape", "mesh")}, **t,
+                      "mem_gib": (m["argument_bytes"] + m["temp_bytes"]) / 2**30})
+    for r in skipped:
+        rows.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+                     f"SKIPPED: {r.get('skip_reason', '')[:60]}"))
+    save_json("roofline_table", table)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

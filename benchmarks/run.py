@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig2,table2,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig2", "benchmarks.motivation"),
+    ("table2", "benchmarks.workload_fluctuation"),
+    ("table3", "benchmarks.elastic_cluster"),
+    ("table4", "benchmarks.agentic"),
+    ("fig8", "benchmarks.convergence"),
+    ("fig9", "benchmarks.warmstart"),
+    ("fig7", "benchmarks.end_to_end"),
+    ("appG", "benchmarks.policy_deepdive"),
+    ("kernels", "benchmarks.kernels_micro"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: "
+                         + ",".join(k for k, _ in MODULES))
+    args = ap.parse_args()
+    subset = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for key, modname in MODULES:
+        if subset and key not in subset:
+            continue
+        t0 = time.monotonic()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run()
+            for name, us, derived in rows:
+                print(f"{name},{us:.1f},{derived}")
+            print(f"_meta/{key}_wall_s,{(time.monotonic() - t0) * 1e6:.0f},"
+                  f"{time.monotonic() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((key, str(e)))
+            print(f"_meta/{key}_FAILED,0.0,{e}")
+    if failures:
+        print(f"_meta/failures,0.0,{failures}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,49 @@
+"""Figure 9 — warm-start re-evolution vs cold start across consecutive
+runtime snapshots (normalised evolution time to reach the cold-start best)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, env, save_json
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.traces import volatile_workload_trace
+
+
+def run() -> list:
+    sim, ev = env()
+    rows: list = []
+    trace = volatile_workload_trace()
+    # consecutive overlapping snapshots (sliding windows)
+    snaps = [trace.window(i, i + 5) for i in range(0, 5, 1)][:4]
+    payload = {}
+    prev_state = None
+    for i, snap in enumerate(snaps):
+        cfg = EvolutionConfig(max_iterations=25, patience=25,
+                              evolution_timeout_s=120, seed=7)
+        t0 = time.monotonic()
+        cold = Evolution(ev, cfg).run(snap)
+        t_cold = time.monotonic() - t0
+        t0 = time.monotonic()
+        warm = Evolution(ev, cfg).run(snap, warm_start=prev_state)
+        t_warm = time.monotonic() - t0
+        # iterations to reach the cold-start best fitness
+        tgt = cold.best.fitness * 1.001
+        warm_iters = next((it for it, f in warm.history if f <= tgt),
+                          warm.iterations_run)
+        cold_iters = next((it for it, f in cold.history if f <= tgt),
+                          cold.iterations_run)
+        red = (1 - (warm_iters + 1) / (cold_iters + 1)) * 100
+        rows.append((f"fig9/snapshot{i}", t_warm * 1e6,
+                     f"cold_iters={cold_iters} warm_iters={warm_iters} "
+                     f"iter_reduction={red:.0f}% "
+                     f"cold={cold.best.fitness:.1f} warm={warm.best.fitness:.1f}"))
+        payload[f"snapshot{i}"] = {"cold_iters": cold_iters,
+                                   "warm_iters": warm_iters,
+                                   "cold_s": t_cold, "warm_s": t_warm}
+        prev_state = warm
+    save_json("fig9_warmstart", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

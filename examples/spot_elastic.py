@@ -1,0 +1,45 @@
+"""Elastic-cluster scenario (§8.2): spot preemptions force reconfiguration;
+the evolved policy discovers partial-migration strategies.
+
+    PYTHONPATH=src python examples/spot_elastic.py
+"""
+from repro.core.evaluator import Evaluator
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.core.plan import HARDWARE, QWEN25_FAMILY
+from repro.core.policy import render_policy
+from repro.core.simulator import Simulator
+from repro.traces.workload import elastic_cluster_traces
+
+
+def main():
+    models = {m.name: m for m in QWEN25_FAMILY.values()}
+    sim = Simulator(models, HARDWARE)
+    ev = Evaluator(sim, models, HARDWARE)
+
+    full = render_policy({"scheduler": "bnb", "time_budget": 5.0,
+                          "batch_scheme": "sweet", "allow_split": True,
+                          "trigger_kind": "always"}, name="full-migration")
+    minimal = render_policy({"scheduler": "greedy", "trigger_kind": "threshold",
+                             "shift_threshold": 9.9,
+                             "migration_keep_threshold": 4.0,
+                             "reconfig_penalty": 8.0}, name="minimal-migration")
+
+    for name, trace in elastic_cluster_traces().items():
+        print(f"=== {name} (cluster sizes: "
+              f"{[o.cluster.total for o in trace.observations]}) ===")
+        for pol in (full, minimal):
+            r = ev.evaluate(pol, trace)
+            print(f"  {pol.name:18s} T={r.fitness:7.1f}s "
+                  f"reconfig={r.sum_reconfig:6.1f}s stale={r.sum_stale:5.1f}s")
+        best = Evolution(ev, EvolutionConfig(max_iterations=25,
+                                             evolution_timeout_s=90,
+                                             seed=0)).run(trace).best
+        r = best.result
+        print(f"  {'evolved':18s} T={r.fitness:7.1f}s "
+              f"reconfig={r.sum_reconfig:6.1f}s stale={r.sum_stale:5.1f}s")
+        print(f"  evolved genome: "
+              f"{ {k: v for k, v in best.policy.genome.items() if k in ('reconfig_penalty', 'migration_keep_threshold', 'trigger_kind', 'scheduler')} }")
+
+
+if __name__ == "__main__":
+    main()

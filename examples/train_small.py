@@ -1,0 +1,41 @@
+"""Train a ~100M-param model for a few hundred steps with the fault-tolerant
+training loop (checkpoint/resume, NaN guard, grad accumulation).
+
+    PYTHONPATH=src python examples/train_small.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.training import data as dl
+from repro.training import optim
+from repro.training.trainer import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_small")
+    args = ap.parse_args()
+
+    # ~100M params: 8 layers × d_model 768 (qwen2-family shape)
+    cfg = ModelConfig(name="qwen2-100m", family="dense", n_layers=8,
+                      d_model=768, n_heads=12, n_kv_heads=4, d_head=64,
+                      d_ff=2048, vocab_size=32000, qkv_bias=True,
+                      tie_embeddings=True)
+    print(f"model: {cfg.param_count() / 1e6:.0f}M params")
+    dcfg = dl.DataConfig(vocab_size=cfg.vocab_size, seq_len=256,
+                         global_batch=8)
+    tcfg = TrainConfig(steps=args.steps, microbatches=4, ckpt_every=100,
+                       ckpt_dir=args.ckpt_dir,
+                       opt=optim.AdamWConfig(lr=1e-3, warmup_steps=30))
+    report = train(cfg, tcfg, dcfg,
+                   on_step=lambda s, l: print(f"  step {s:4d} loss {l:.4f}")
+                   if s % 25 == 0 else None)
+    print(f"done: loss {report.losses[0]:.3f} → {report.losses[-1]:.3f} "
+          f"({report.steps_done} steps, resumed={report.resumed_from}, "
+          f"nan-skips={report.skipped_nan})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolution for the whole framework."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    MLAConfig,
+    ModelConfig,
+    PREFILL_32K,
+    SHAPES,
+    SSMConfig,
+    ShapeSpec,
+    TRAIN_4K,
+    shape_applicable,
+)
+
+_ARCH_MODULES: Dict[str, str] = {
+    "mixtral-8x22b": "mixtral_8x22b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "qwen1.5-110b": "qwen1_5_110b",
+    "minicpm3-4b": "minicpm3_4b",
+    "gemma2-9b": "gemma2_9b",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-tiny": "whisper_tiny",
+    "chameleon-34b": "chameleon_34b",
+}
+
+
+def list_archs() -> List[str]:
+    return list(_ARCH_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; available: {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def all_cells():
+    """Every (arch, shape) cell with applicability flags — 40 total."""
+    cells = []
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in ALL_SHAPES:
+            ok, why = shape_applicable(cfg, shape)
+            cells.append((arch, shape.name, ok, why))
+    return cells

@@ -1,0 +1,17 @@
+"""Chameleon-34B — early-fusion VLM backbone; VQ image tokens share the vocab.
+[arXiv:2405.09818]  Modality frontend is a STUB: input_specs() provides token ids
+(text + VQ image tokens drawn from the shared 65536 vocab).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    n_layers=48,
+    d_model=8192,
+    n_heads=64,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=22016,
+    vocab_size=65536,
+)

@@ -1,0 +1,17 @@
+"""Mamba2-1.3B — SSD (state-space duality), attention-free. [arXiv:2405.21060]"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_head=64,
+    d_ff=0,
+    vocab_size=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64,
+                  n_groups=1, chunk_size=256),
+    tie_embeddings=True,
+)

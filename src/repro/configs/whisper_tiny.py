@@ -1,0 +1,20 @@
+"""Whisper-tiny — enc-dec transformer backbone; conv frontend is a STUB.
+[arXiv:2212.04356]  input_specs() provides precomputed frame embeddings.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                      # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_head=64,
+    d_ff=1536,
+    vocab_size=51865,
+    is_encoder_decoder=True,
+    n_encoder_layers=4,
+    n_frames=1500,
+    tie_embeddings=True,
+)

@@ -1,0 +1,140 @@
+"""Trace-replay evaluator (§5.3): scores a candidate policy against the
+snapshotted runtime trace and produces structured artifact feedback (Table 1).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.execution_model import ExecutionAccumulator, IntervalRecord
+from repro.core.plan import ClusterState, Ctx, GPUType, ModelSpec, Plan
+from repro.core.policy import Policy
+from repro.core.simulator import PENALTY, Simulator
+from repro.core.timeouts import CandidateTimeout, run_with_deadline
+from repro.traces.workload import Trace
+
+INFEASIBLE_FITNESS = float("inf")
+
+
+@dataclass
+class EvalResult:
+    fitness: float                       # T_total (lower better); inf = invalid
+    N: int = 0
+    sum_sched: float = 0.0
+    sum_stale: float = 0.0
+    sum_reconfig: float = 0.0
+    sum_serve: float = 0.0
+    records: List[IntervalRecord] = field(default_factory=list)
+    error: Optional[str] = None
+    wall_s: float = 0.0
+
+    @property
+    def valid(self) -> bool:
+        return self.error is None and self.fitness < INFEASIBLE_FITNESS
+
+    def artifact_feedback(self) -> Dict[str, float]:
+        """Table 1 row for this candidate."""
+        return {
+            "N": self.N,
+            "sum_sched": round(self.sum_sched, 3),
+            "sum_stale": round(self.sum_stale, 3),
+            "sum_reconfig": round(self.sum_reconfig, 3),
+            "sum_serve": round(self.sum_serve, 3),
+            "T_total": round(self.fitness, 3)
+            if self.fitness < INFEASIBLE_FITNESS else float("inf"),
+        }
+
+
+@dataclass
+class Evaluator:
+    sim: Simulator
+    models: Dict[str, ModelSpec]
+    hardware: Dict[str, GPUType]
+    candidate_timeout_s: float = 20.0     # candidate-level timeout (§6.1)
+    sched_time_scale: float = 1.0         # calibrate measured CPU time → cluster
+    monitor_interval_s: float = 5.0
+
+    def make_ctx(self, trace: Trace, idx: int, current_plan: Optional[Plan],
+                 last_w, last_c, scratch: Dict) -> Ctx:
+        obs = trace.observations[idx]
+        return Ctx(
+            time=obs.time, timestamp_idx=idx,
+            workloads=list(obs.workloads), cluster=obs.cluster,
+            current_plan=current_plan, models=self.models,
+            hardware=self.hardware, simulator=self.sim,
+            history=[list(o.workloads) for o in trace.observations[max(0, idx - 3):idx]],
+            last_resched_workloads=last_w, last_resched_cluster=last_c,
+            scratch=scratch)
+
+    def evaluate(self, policy: Policy, trace: Trace) -> EvalResult:
+        t_start = time.monotonic()
+        try:
+            policy.compile()
+        except Exception as e:  # noqa: BLE001
+            return EvalResult(INFEASIBLE_FITNESS, error=f"compile: {e}")
+
+        acc = ExecutionAccumulator(self.sim)
+        plan: Optional[Plan] = None
+        last_w = last_c = None
+        scratch: Dict = {"steps_since_resched": 0}
+
+        for idx in range(len(trace)):
+            ctx = self.make_ctx(trace, idx, plan, last_w, last_c, scratch)
+            obs = trace.observations[idx]
+            # mandatory resched when the current plan no longer fits the cluster
+            forced = False
+            if plan is not None and plan.groups:
+                feas, _ = self.sim.plan_feasible(plan, obs.cluster,
+                                                 list(obs.workloads))
+                forced = not feas
+            try:
+                if idx == 0 or plan is None:
+                    trigger = True
+                elif forced:
+                    trigger = True
+                else:
+                    trigger, _ = run_with_deadline(
+                        lambda: policy.should_reschedule(ctx),
+                        self.candidate_timeout_s)
+            except CandidateTimeout:
+                return EvalResult(INFEASIBLE_FITNESS, error="trigger timeout")
+            except Exception as e:  # noqa: BLE001
+                return EvalResult(INFEASIBLE_FITNESS, error=f"trigger: {e}")
+
+            if trigger:
+                try:
+                    new_plan, dt = run_with_deadline(
+                        lambda: policy.schedule(ctx), self.candidate_timeout_s)
+                except CandidateTimeout:
+                    return EvalResult(INFEASIBLE_FITNESS, error="schedule timeout")
+                except Exception as e:  # noqa: BLE001
+                    return EvalResult(INFEASIBLE_FITNESS, error=f"schedule: {e}")
+                if not isinstance(new_plan, Plan) or not new_plan.groups:
+                    return EvalResult(INFEASIBLE_FITNESS, error="empty plan")
+                feas, why = self.sim.plan_feasible(new_plan, obs.cluster,
+                                                   list(obs.workloads))
+                if not feas:
+                    return EvalResult(INFEASIBLE_FITNESS, error=f"infeasible: {why}")
+                # plans must cover every model in the workload
+                served = {g.model for g in new_plan.groups}
+                if any(w.model not in served for w in obs.workloads):
+                    return EvalResult(INFEASIBLE_FITNESS, error="uncovered model")
+                acc.interval(idx, plan, new_plan, list(obs.workloads),
+                             t_sched=dt * self.sched_time_scale, rescheduled=True)
+                plan = new_plan
+                last_w, last_c = list(obs.workloads), obs.cluster
+                scratch["steps_since_resched"] = 0
+            else:
+                acc.interval(idx, plan, plan, list(obs.workloads),
+                             t_sched=0.0, rescheduled=False)
+                scratch["steps_since_resched"] += 1
+
+            if acc.T_total >= PENALTY:
+                return EvalResult(INFEASIBLE_FITNESS, error="penalty serve cost")
+
+        return EvalResult(
+            fitness=acc.T_total, N=acc.N, sum_sched=acc.sum_sched,
+            sum_stale=acc.sum_stale, sum_reconfig=acc.sum_reconfig,
+            sum_serve=acc.sum_serve, records=acc.records,
+            wall_s=time.monotonic() - t_start)

@@ -1,0 +1,177 @@
+"""Evolutionary synthesis workflow (§5.2, §5.4, §6.1).
+
+MAP-Elites-inspired program database (cells keyed by behaviour descriptors:
+rescheduling count N × scheduling-cost share) combined with island-based
+population management; warm-start re-evolution seeds the next cycle with the
+previous cycle's elites + their mutations.  Candidate evaluation is
+independent across the population → optional thread-pool parallelism.
+"""
+from __future__ import annotations
+
+import random
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.evaluator import EvalResult, Evaluator
+from repro.core.mutation import Mutator, StructuredMutator
+from repro.core.policy import Policy, seed_policies
+from repro.core.timeouts import EvolutionClock, EvolutionTimeout
+from repro.traces.workload import Trace
+
+
+@dataclass
+class Candidate:
+    policy: Policy
+    result: EvalResult
+    island: int
+    iteration: int
+
+    @property
+    def fitness(self) -> float:
+        return self.result.fitness
+
+
+def _descriptor(res: EvalResult, trace_len: int) -> Tuple[int, int]:
+    """MAP-Elites cell: (N bucket, scheduling-share bucket)."""
+    n_b = min(res.N, trace_len)
+    share = res.sum_sched / max(res.fitness, 1e-9)
+    s_b = min(int(share * 20), 9)
+    return (n_b, s_b)
+
+
+@dataclass
+class EvolutionConfig:
+    max_iterations: int = 100
+    population_size: int = 50
+    n_islands: int = 3
+    elite_ratio: float = 0.2
+    migrate_every: int = 12
+    patience: int = 40                     # stop if no improvement
+    evolution_timeout_s: float = 600.0     # evolution-level timeout (§6.1)
+    parallel_eval: int = 1                 # §7.3: candidate eval parallelism
+    seed: int = 0
+
+
+@dataclass
+class EvolutionState:
+    """Program database: islands of MAP-Elites cells."""
+    cells: List[Dict[Tuple[int, int], Candidate]] = field(default_factory=list)
+    best: Optional[Candidate] = None
+    history: List[Tuple[int, float]] = field(default_factory=list)  # (iter, best)
+    iterations_run: int = 0
+
+    def elites(self, island: Optional[int] = None, k: int = 10) -> List[Candidate]:
+        pools = self.cells if island is None else [self.cells[island]]
+        cands = [c for pool in pools for c in pool.values() if c.result.valid]
+        return sorted(cands, key=lambda c: c.fitness)[:k]
+
+    def insert(self, cand: Candidate, trace_len: int) -> bool:
+        """Insert into its island cell if better; update global best."""
+        if not cand.result.valid:
+            return False
+        cell = _descriptor(cand.result, trace_len)
+        pool = self.cells[cand.island]
+        prev = pool.get(cell)
+        improved_cell = prev is None or cand.fitness < prev.fitness
+        if improved_cell:
+            pool[cell] = cand
+        if self.best is None or cand.fitness < self.best.fitness:
+            self.best = cand
+        return improved_cell
+
+
+class Evolution:
+    """One evolution cycle e_i over a snapshotted trace."""
+
+    def __init__(self, evaluator: Evaluator, cfg: EvolutionConfig,
+                 mutator: Optional[Mutator] = None):
+        self.evaluator = evaluator
+        self.cfg = cfg
+        self.mutator = mutator or StructuredMutator()
+
+    # ------------------------------------------------------------------ #
+    def _evaluate(self, policies: List[Policy], trace: Trace) -> List[EvalResult]:
+        if self.cfg.parallel_eval > 1:
+            with ThreadPoolExecutor(self.cfg.parallel_eval) as ex:
+                return list(ex.map(lambda p: self.evaluator.evaluate(p, trace),
+                                   policies))
+        return [self.evaluator.evaluate(p, trace) for p in policies]
+
+    def _population_context(self, state: EvolutionState) -> Dict:
+        elites = state.elites(k=6)
+        return {
+            "best_fitness": state.best.fitness if state.best else None,
+            "elite_genomes": [c.policy.genome for c in elites
+                              if c.policy.genome],
+            "explored": len([c for pool in state.cells for c in pool.values()]),
+        }
+
+    # ------------------------------------------------------------------ #
+    def run(self, trace: Trace,
+            warm_start: Optional[EvolutionState] = None,
+            extra_seeds: Optional[List[Policy]] = None) -> EvolutionState:
+        cfg = self.cfg
+        rng = random.Random(cfg.seed)
+        clock = EvolutionClock(cfg.evolution_timeout_s)
+        state = EvolutionState(cells=[{} for _ in range(cfg.n_islands)])
+
+        # --- seeding: warm-start elites + their mutations (§6.1), with the
+        # stock seed policies kept as insurance against regime shifts where
+        # the prior population offers no reusable structure ---
+        seeds: List[Policy] = list((extra_seeds or []))
+        if warm_start is not None and warm_start.best is not None:
+            top = warm_start.elites(k=max(3, cfg.population_size // 10))
+            seeds += [c.policy for c in top]
+            for c in top:
+                seeds.append(self.mutator.mutate(
+                    c.policy, c.result.artifact_feedback(), [], {}, rng))
+        seeds += list(seed_policies().values())
+
+        results = self._evaluate(seeds, trace)
+        for i, (p, r) in enumerate(zip(seeds, results)):
+            state.insert(Candidate(p, r, island=i % cfg.n_islands, iteration=0),
+                         len(trace))
+        if state.best is not None:
+            state.history.append((0, state.best.fitness))
+
+        # --- iterations ---
+        no_improve = 0
+        feedback_children: Dict[str, List[Dict]] = {}
+        for it in range(1, cfg.max_iterations + 1):
+            try:
+                clock.check()
+            except EvolutionTimeout:
+                break
+            island = it % cfg.n_islands
+            elites = state.elites(island=island,
+                                  k=max(2, int(cfg.population_size
+                                               * cfg.elite_ratio)))
+            if not elites:
+                elites = state.elites(k=4)
+            if not elites:
+                break
+            parent = rng.choice(elites)
+            child_fb = feedback_children.get(parent.policy.name, [])
+            child_pol = self.mutator.mutate(
+                parent.policy, parent.result.artifact_feedback(),
+                child_fb[-4:], self._population_context(state), rng)
+            child_pol.name = f"i{island}-g{it}"
+            res = self._evaluate([child_pol], trace)[0]
+            feedback_children.setdefault(parent.policy.name, []).append(
+                res.artifact_feedback())
+            prev_best = state.best.fitness if state.best else float("inf")
+            state.insert(Candidate(child_pol, res, island=island, iteration=it),
+                         len(trace))
+            state.iterations_run = it
+            new_best = state.best.fitness if state.best else float("inf")
+            state.history.append((it, new_best))
+            no_improve = 0 if new_best < prev_best - 1e-9 else no_improve + 1
+            if no_improve >= cfg.patience:
+                break
+            # island migration: copy global best into a random island
+            if it % cfg.migrate_every == 0 and state.best is not None:
+                tgt = rng.randrange(cfg.n_islands)
+                state.insert(Candidate(state.best.policy, state.best.result,
+                                       island=tgt, iteration=it), len(trace))
+        return state

@@ -1,0 +1,247 @@
+"""Policy-as-source-code (§5.1, §6.2).
+
+A serving policy is *source code* defining the co-evolved pair
+
+    should_reschedule(ctx) -> bool
+    schedule(ctx)          -> Plan
+
+compiled via ``exec`` in a restricted namespace.  Policies carry a GENOME
+header (JSON on the first line) — the structured parameter summary that the
+offline StructuredMutator mutates and re-renders; the online LLMMutator can
+instead rewrite the source directly (diff-based, AlphaEvolve-style).  Hot-swap
+(§6.2) is therefore a pure code replacement: the data plane re-execs the
+staged source at its next monitoring step.
+"""
+from __future__ import annotations
+
+import json
+import math
+import textwrap
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core import schedulers
+from repro.core.plan import Ctx, Plan, ReplicaGroup
+
+GENOME_PREFIX = "# GENOME: "
+
+# default genome = paper's "reactive baseline" starting point
+DEFAULT_GENOME: Dict[str, Any] = {
+    "scheduler": "greedy",          # greedy | bnb | hybrid
+    "time_budget": 2.0,             # B&B anytime deadline (thoroughness)
+    "batch_scheme": "pow2",         # pow2 | sweet | exhaustive
+    "tp_floor_large": 0,            # App. G parallel-strategy constraint
+    "intra_node_only": False,       # §7.2 (i): bound TP within a node
+    "heterogeneity_aware": True,    # §7.2 (iv)
+    "weighted_obj": False,          # Eq. 23
+    "allow_split": False,           # App. C multi-group placements (thorough)
+    "reconfig_penalty": 0.0,        # plan choice: serve + penalty × reconfig
+    "migration_keep_threshold": 0.0,  # per-model cost-benefit keep rule (§8.2)
+    "trigger_kind": "always",       # always | threshold | periodic | hybrid
+    "shift_threshold": 0.3,         # workload_shift() trigger level
+    "min_interval": 1,              # periodic trigger / cooldown
+}
+
+
+# --------------------------------------------------------------------------- #
+# restricted execution environment
+# --------------------------------------------------------------------------- #
+_SAFE_BUILTINS = {
+    "len": len, "min": min, "max": max, "sum": sum, "abs": abs, "range": range,
+    "enumerate": enumerate, "sorted": sorted, "zip": zip, "map": map,
+    "filter": filter, "list": list, "dict": dict, "set": set, "tuple": tuple,
+    "float": float, "int": int, "bool": bool, "str": str, "round": round,
+    "any": any, "all": all, "print": print, "isinstance": isinstance,
+    "ValueError": ValueError, "Exception": Exception, "reversed": reversed,
+    "__build_class__": __builtins__["__build_class__"]
+    if isinstance(__builtins__, dict) else __builtins__.__build_class__,
+    "__name__": "policy",
+}
+
+
+def policy_namespace() -> Dict[str, Any]:
+    """Names available to policy code (the paper exposes the simulator and
+    scheduling building blocks to generated programs)."""
+    return {
+        "__builtins__": dict(_SAFE_BUILTINS),
+        "math": math,
+        "schedulers": schedulers,
+        "Plan": Plan,
+        "ReplicaGroup": ReplicaGroup,
+        "greedy_schedule": schedulers.greedy_schedule,
+        "bnb_schedule": schedulers.bnb_schedule,
+        "full_migration": schedulers.full_migration,
+        "minimal_migration": schedulers.minimal_migration,
+    }
+
+
+@dataclass
+class Policy:
+    """Compiled policy: source of record is the code string."""
+    source: str
+    genome: Optional[Dict[str, Any]] = None
+    name: str = "anon"
+    _fns: Optional[Tuple[Callable, Callable]] = field(default=None, repr=False)
+
+    def compile(self) -> "Policy":
+        ns = policy_namespace()
+        exec(compile(self.source, f"<policy:{self.name}>", "exec"), ns)  # noqa: S102
+        if "should_reschedule" not in ns or "schedule" not in ns:
+            raise ValueError("policy source must define should_reschedule and schedule")
+        self._fns = (ns["should_reschedule"], ns["schedule"])
+        if self.genome is None:
+            self.genome = parse_genome(self.source)
+        return self
+
+    @property
+    def fns(self) -> Tuple[Callable, Callable]:
+        if self._fns is None:
+            self.compile()
+        return self._fns
+
+    def should_reschedule(self, ctx: Ctx) -> bool:
+        return bool(self.fns[0](ctx))
+
+    def schedule(self, ctx: Ctx) -> Plan:
+        return self.fns[1](ctx)
+
+
+def parse_genome(source: str) -> Optional[Dict[str, Any]]:
+    first = source.lstrip().splitlines()[0] if source.strip() else ""
+    if first.startswith(GENOME_PREFIX):
+        try:
+            return json.loads(first[len(GENOME_PREFIX):])
+        except json.JSONDecodeError:
+            return None
+    return None
+
+
+# --------------------------------------------------------------------------- #
+# genome -> source renderer
+# --------------------------------------------------------------------------- #
+_TEMPLATE = '''\
+{genome_line}
+# Auto-rendered serving policy. should_reschedule controls Trade-off (i)
+# (rescheduling frequency); schedule controls Trade-offs (ii)+(iii)
+# (scheduling thoroughness, reconfiguration aggressiveness).
+
+G = {genome_repr}
+
+
+def should_reschedule(ctx):
+    if ctx.current_plan is None or not ctx.current_plan.groups:
+        return True                      # cold start
+    if ctx.cluster_changed():
+        return True                      # mandatory on cluster transitions
+    kind = G["trigger_kind"]
+    steps_since = ctx.scratch.get("steps_since_resched", 0)
+    if kind == "always":
+        return True
+    if kind == "periodic":
+        return steps_since >= G["min_interval"]
+    shift = ctx.workload_shift()
+    if kind == "threshold":
+        return shift > G["shift_threshold"]
+    # hybrid: threshold with cooldown
+    return shift > G["shift_threshold"] and steps_since >= G["min_interval"]
+
+
+def _base_plan(ctx):
+    if G["scheduler"] == "greedy":
+        return greedy_schedule(ctx, batch_scheme=G["batch_scheme"],
+                               heterogeneity_aware=G["heterogeneity_aware"])
+    if G["scheduler"] == "bnb":
+        return bnb_schedule(ctx, deadline_s=G["time_budget"],
+                            batch_scheme=G["batch_scheme"],
+                            tp_floor_large=G["tp_floor_large"],
+                            intra_node_only=G["intra_node_only"],
+                            weighted_obj=G["weighted_obj"],
+                            allow_split=G["allow_split"])
+    # hybrid: greedy seed, refine with the remaining budget
+    g = greedy_schedule(ctx, batch_scheme=G["batch_scheme"],
+                        heterogeneity_aware=G["heterogeneity_aware"])
+    b = bnb_schedule(ctx, deadline_s=G["time_budget"],
+                     batch_scheme=G["batch_scheme"],
+                     tp_floor_large=G["tp_floor_large"],
+                     intra_node_only=G["intra_node_only"],
+                     weighted_obj=G["weighted_obj"],
+                     allow_split=G["allow_split"])
+    sim = ctx.simulator
+    return b if sim.serve_cost(b, ctx.workloads) <= \
+        sim.serve_cost(g, ctx.workloads) else g
+
+
+def schedule(ctx):
+    sim = ctx.simulator
+    new = _base_plan(ctx)
+    old = ctx.current_plan
+    if old is None or not old.groups:
+        return new
+    # Trade-off (iii): reconfiguration-aware plan selection.  Candidates:
+    # stay / move fully / per-model partial migration (cost-benefit keep rule).
+    cands = [old, new]
+    if G["migration_keep_threshold"] > 0.0:
+        kept = []
+        free = {{g: ctx.cluster.count(g) for g in ctx.cluster.types()}}
+        for w in ctx.workloads:
+            og = old.for_model(w.model)
+            ng = new.for_model(w.model)
+            fits = og and all(free.get(g.gpu_type, 0) >= g.devices for g in og)
+            if fits:
+                gain = (sim.model_latency(old, w) - sim.model_latency(new, w))
+                cost = sum(sim.weight_transfer_time(w.model, g.gpu_type)
+                           for g in ng)
+                if gain < G["migration_keep_threshold"] * cost:
+                    for g in og:
+                        free[g.gpu_type] -= g.devices
+                    kept.extend(og)
+                    continue
+            for g in ng:
+                if free.get(g.gpu_type, 0) >= g.devices:
+                    free[g.gpu_type] -= g.devices
+                    kept.append(g)
+        cands.append(Plan(tuple(kept)))
+    best, best_score = None, None
+    for p in cands:
+        feas, _ = sim.plan_feasible(p, ctx.cluster, ctx.workloads)
+        if not feas:
+            continue
+        score = (sim.serve_cost(p, ctx.workloads)
+                 + G["reconfig_penalty"] * sim.reconfig_cost(old, p))
+        if best is None or score < best_score:
+            best, best_score = p, score
+    return best if best is not None else new
+'''
+
+
+def render_policy(genome: Dict[str, Any], name: str = "rendered") -> Policy:
+    g = dict(DEFAULT_GENOME)
+    g.update(genome)
+    src = _TEMPLATE.format(
+        genome_line=GENOME_PREFIX + json.dumps(g, sort_keys=True),
+        genome_repr=repr(g),            # Python-literal dict (json has true/false)
+    )
+    return Policy(source=src, genome=g, name=name)
+
+
+# --------------------------------------------------------------------------- #
+# seed policies (§5.4: diverse starting vocabulary of design patterns)
+# --------------------------------------------------------------------------- #
+def seed_policies() -> Dict[str, Policy]:
+    seeds = {
+        "greedy-reactive": {"scheduler": "greedy", "trigger_kind": "always"},
+        "ilp-thorough": {"scheduler": "bnb", "time_budget": 30.0,
+                         "batch_scheme": "exhaustive", "allow_split": True,
+                         "trigger_kind": "threshold", "shift_threshold": 5.0},
+        "hybrid-threshold": {"scheduler": "hybrid", "time_budget": 3.0,
+                             "batch_scheme": "sweet",
+                             "trigger_kind": "threshold",
+                             "shift_threshold": 0.4,
+                             "reconfig_penalty": 1.0},
+        "conservative-migrator": {"scheduler": "greedy",
+                                  "trigger_kind": "hybrid",
+                                  "shift_threshold": 0.25, "min_interval": 1,
+                                  "reconfig_penalty": 2.0,
+                                  "migration_keep_threshold": 1.0},
+    }
+    return {k: render_policy(v, name=k) for k, v in seeds.items()}

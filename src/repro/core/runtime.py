@@ -1,0 +1,257 @@
+"""Two-plane self-evolving runtime (§4, §6.2).
+
+* DataPlane — executes the live policy at every monitoring step, applies
+  plans to a backend (simulator or the real JAX engine), records runtime
+  conditions into a circular buffer (sliding-window snapshotting), and
+  hot-swaps in staged policy code at step boundaries.
+* ControlPlane — asynchronously snapshots the recent trace, runs an
+  LLM-driven evolution cycle (warm-started from the previous cycle), and
+  stages superior policies for the data plane.
+
+Both planes can run threaded (``run_async``) or be stepped deterministically
+(``step``) for tests and benchmarks.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Callable, Deque, Dict, List, Optional
+
+from repro.core.evaluator import Evaluator
+from repro.core.evolution import Evolution, EvolutionConfig, EvolutionState
+from repro.core.mutation import Mutator
+from repro.core.execution_model import ExecutionAccumulator
+from repro.core.plan import ClusterState, Ctx, Plan, Workload
+from repro.core.policy import Policy
+from repro.traces.workload import TimestampObservation, Trace
+
+
+# --------------------------------------------------------------------------- #
+# staging area: policy hot-swap (§6.2, Fig. 6 left)
+# --------------------------------------------------------------------------- #
+class PolicyStage:
+    """Shared staging area; swap is a pure source-code replacement."""
+
+    def __init__(self, path: Optional[Path] = None):
+        self._lock = threading.Lock()
+        self._source: Optional[str] = None
+        self._version = 0
+        self._path = path
+
+    def publish(self, policy: Policy) -> int:
+        with self._lock:
+            self._source = policy.source
+            self._version += 1
+            if self._path is not None:
+                tmp = self._path.with_suffix(".tmp")
+                tmp.write_text(policy.source)
+                tmp.rename(self._path)          # atomic swap on POSIX
+            return self._version
+
+    def poll(self, seen_version: int) -> Optional[tuple]:
+        with self._lock:
+            if self._version > seen_version and self._source is not None:
+                return self._version, self._source
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# sliding-window trace snapshotting (§6.2, Fig. 6 right)
+# --------------------------------------------------------------------------- #
+class SnapshotBuffer:
+    """Fixed-size circular buffer of monitoring observations."""
+
+    def __init__(self, capacity: int = 64):
+        self._buf: Deque[TimestampObservation] = deque(maxlen=capacity)
+        self._lock = threading.Lock()
+
+    def record(self, obs: TimestampObservation) -> None:
+        with self._lock:
+            self._buf.append(obs)
+
+    def snapshot(self, window: int, name: str = "snapshot") -> Optional[Trace]:
+        with self._lock:
+            if not self._buf:
+                return None
+            obs = list(self._buf)[-window:]
+        models = tuple(sorted({w.model for o in obs for w in o.workloads}))
+        reindexed = tuple(
+            TimestampObservation(i, o.time, o.workloads, o.cluster)
+            for i, o in enumerate(obs))
+        return Trace(name, reindexed, models)
+
+
+# --------------------------------------------------------------------------- #
+# data plane
+# --------------------------------------------------------------------------- #
+@dataclass
+class DataPlane:
+    evaluator: Evaluator                       # supplies ctx/cost machinery
+    policy: Policy
+    stage: PolicyStage
+    buffer: SnapshotBuffer
+    backend_apply: Optional[Callable[[Plan, Ctx], None]] = None
+    acc: ExecutionAccumulator = None
+    plan: Optional[Plan] = None
+    swap_count: int = 0
+    _seen_version: int = 0
+    _last_w: Optional[List[Workload]] = None
+    _last_c: Optional[ClusterState] = None
+    _scratch: Dict = field(default_factory=lambda: {"steps_since_resched": 0})
+    _step_idx: int = 0
+
+    def __post_init__(self):
+        if self.acc is None:
+            self.acc = ExecutionAccumulator(self.evaluator.sim)
+        self.policy.compile()
+
+    def maybe_hot_swap(self) -> bool:
+        """Load staged policy code at a monitoring-step boundary (§6.2)."""
+        staged = self.stage.poll(self._seen_version)
+        if staged is None:
+            return False
+        version, source = staged
+        try:
+            new_policy = Policy(source=source,
+                                name=f"swap-v{version}").compile()
+        except Exception:  # noqa: BLE001 — bad staged code never disrupts serving
+            self._seen_version = version
+            return False
+        self.policy = new_policy
+        self._seen_version = version
+        self.swap_count += 1
+        return True
+
+    def step(self, obs: TimestampObservation) -> Dict:
+        """One monitoring step: record, hot-swap, trigger, schedule, serve."""
+        self.buffer.record(obs)
+        swapped = self.maybe_hot_swap()
+        ctx = Ctx(time=obs.time, timestamp_idx=self._step_idx,
+                  workloads=list(obs.workloads), cluster=obs.cluster,
+                  current_plan=self.plan, models=self.evaluator.models,
+                  hardware=self.evaluator.hardware,
+                  simulator=self.evaluator.sim,
+                  last_resched_workloads=self._last_w,
+                  last_resched_cluster=self._last_c, scratch=self._scratch)
+        forced = False
+        if self.plan is not None and self.plan.groups:
+            ok, _ = self.evaluator.sim.plan_feasible(
+                self.plan, obs.cluster, list(obs.workloads))
+            forced = not ok
+        trigger = (self.plan is None or forced
+                   or self.policy.should_reschedule(ctx))
+        if trigger:
+            t0 = time.monotonic()
+            new_plan = self.policy.schedule(ctx)
+            dt = (time.monotonic() - t0) * self.evaluator.sched_time_scale
+            rec = self.acc.interval(self._step_idx, self.plan, new_plan,
+                                    list(obs.workloads), t_sched=dt,
+                                    rescheduled=True)
+            if self.backend_apply is not None:
+                self.backend_apply(new_plan, ctx)
+            self.plan = new_plan
+            self._last_w, self._last_c = list(obs.workloads), obs.cluster
+            self._scratch["steps_since_resched"] = 0
+        else:
+            rec = self.acc.interval(self._step_idx, self.plan, self.plan,
+                                    list(obs.workloads), t_sched=0.0,
+                                    rescheduled=False)
+            self._scratch["steps_since_resched"] += 1
+        self._step_idx += 1
+        return {"rescheduled": rec.rescheduled, "interval_total": rec.total,
+                "hot_swapped": swapped, "plan": self.plan}
+
+
+# --------------------------------------------------------------------------- #
+# control plane
+# --------------------------------------------------------------------------- #
+@dataclass
+class ControlPlane:
+    evaluator: Evaluator
+    stage: PolicyStage
+    buffer: SnapshotBuffer
+    evolution_cfg: EvolutionConfig
+    window: int = 16
+    mutator: Optional[Mutator] = None
+    state: Optional[EvolutionState] = None          # warm-start carrier (§6.1)
+    cycles: int = 0
+    published: int = 0
+    best_fitness: float = float("inf")
+
+    def run_cycle(self, current_policy: Optional[Policy] = None) -> Optional[EvolutionState]:
+        snap = self.buffer.snapshot(self.window, name=f"cycle{self.cycles}")
+        if snap is None or len(snap) < 2:
+            return None
+        evo = Evolution(self.evaluator, self.evolution_cfg, mutator=self.mutator)
+        extra = [current_policy] if current_policy is not None else None
+        state = evo.run(snap, warm_start=self.state, extra_seeds=extra)
+        self.cycles += 1
+        if state.best is not None:
+            # publish only superior policies (compare on the same snapshot)
+            incumbent = float("inf")
+            if current_policy is not None:
+                incumbent = self.evaluator.evaluate(current_policy, snap).fitness
+            if state.best.fitness < incumbent:
+                self.stage.publish(state.best.policy)
+                self.published += 1
+                self.best_fitness = state.best.fitness
+        self.state = state                           # warm start for e_{i+1}
+        return state
+
+
+# --------------------------------------------------------------------------- #
+# whole system: Autopoiesis
+# --------------------------------------------------------------------------- #
+@dataclass
+class Autopoiesis:
+    """Convenience wrapper wiring both planes over a live trace."""
+    evaluator: Evaluator
+    initial_policy: Policy
+    evolution_cfg: EvolutionConfig
+    window: int = 16
+    mutator: Optional[Mutator] = None
+    backend_apply: Optional[Callable[[Plan, Ctx], None]] = None
+    evolve_every: int = 4                       # control cycle cadence (steps)
+
+    def __post_init__(self):
+        self.stage = PolicyStage()
+        self.buffer = SnapshotBuffer(capacity=4 * self.window)
+        self.data_plane = DataPlane(self.evaluator, self.initial_policy,
+                                    self.stage, self.buffer,
+                                    backend_apply=self.backend_apply)
+        self.control_plane = ControlPlane(self.evaluator, self.stage,
+                                          self.buffer, self.evolution_cfg,
+                                          window=self.window,
+                                          mutator=self.mutator)
+
+    # deterministic co-stepping (tests / benchmarks)
+    def run_trace(self, trace: Trace, evolve: bool = True) -> ExecutionAccumulator:
+        for i, obs in enumerate(trace.observations):
+            self.data_plane.step(obs)
+            if evolve and i > 0 and i % self.evolve_every == 0:
+                self.control_plane.run_cycle(self.data_plane.policy)
+        return self.data_plane.acc
+
+    # threaded (live) mode
+    def run_async(self, trace: Trace, step_interval_s: float = 0.05
+                  ) -> ExecutionAccumulator:
+        stop = threading.Event()
+
+        def control_loop():
+            while not stop.is_set():
+                self.control_plane.run_cycle(self.data_plane.policy)
+                stop.wait(step_interval_s)
+
+        th = threading.Thread(target=control_loop, daemon=True)
+        th.start()
+        try:
+            for obs in trace.observations:
+                self.data_plane.step(obs)
+                time.sleep(step_interval_s)
+        finally:
+            stop.set()
+            th.join(timeout=10)
+        return self.data_plane.acc

@@ -1,0 +1,292 @@
+"""Sharding rules mapping model pytrees onto the production mesh.
+
+Policy (DESIGN.md §5):
+  * batch dims           -> ("pod", "data")  (or ("data",) single-pod)
+  * weight "FSDP" dim    -> "data"  (ZeRO-3-style; XLA all-gathers per layer)
+  * weight tensor-par dim-> "model" (Megatron: heads / d_ff / vocab)
+  * KV-cache sequence    -> "model" (kv-head counts < axis size; seq shards evenly)
+  * params replicated over "pod" (cross-pod = pure data parallelism; gradient
+    all-reduce over "pod" is inserted by XLA)
+
+Every rule is sanitised against divisibility: any dim not divisible by its
+assigned axis size falls back to replication on that dim (e.g. vocab 50280 on
+a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    mode: str = "tp"                 # "tp": Megatron TP × FSDP; "fsdp": pure ZeRO-3/DP
+    tp_axis: str = "model"
+    fsdp_axis: Optional[str] = "data"
+    batch_axes: Tuple[str, ...] = ("data",)
+    # decode-2D-TP (§Perf): replicate the (tiny) decode batch so the data
+    # axis is free for weight-row sharding with partial-sum matmuls instead
+    # of per-step weight all-gathers
+    replicate_batch: bool = False
+
+    @property
+    def tp_size(self) -> int:
+        return self.mesh.shape[self.tp_axis]
+
+    @property
+    def batch_axes_pref(self) -> Tuple[str, ...]:
+        """Preference order for batch sharding; fsdp mode also uses the model
+        axis for pure data parallelism."""
+        if self.mode == "fsdp":
+            return (*self.batch_axes, self.tp_axis)
+        return self.batch_axes
+
+    @property
+    def batch_size_divisor(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.batch_axes]))
+
+
+def _tp_compatible(cfg: ModelConfig, tp: int) -> bool:
+    """Megatron-style head sharding needs q-head counts divisible by tp."""
+    if cfg.family == "ssm":
+        return cfg.ssm.n_heads(cfg.d_model) % tp == 0
+    if cfg.n_heads % tp != 0:
+        return False
+    if cfg.family == "hybrid" and cfg.ssm is not None:
+        if cfg.ssm.n_heads(cfg.d_model) % tp != 0:
+            return False
+    return True
+
+
+def make_policy(mesh: Mesh, cfg: Optional[ModelConfig] = None) -> ShardingPolicy:
+    axes = tuple(mesh.axis_names)
+    batch_axes = ("pod", "data") if "pod" in axes else ("data",)
+    mode = "tp"
+    if cfg is not None and not _tp_compatible(cfg, mesh.shape["model"]):
+        mode = "fsdp"
+    return ShardingPolicy(mesh, mode=mode, batch_axes=batch_axes)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _sanitize(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple) -> P:
+    """Drop axis assignments whose dim isn't divisible by the axis size."""
+    out = []
+    for dim, entry in zip(shape, spec):
+        if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def _pad(shape: Tuple[int, ...], trailing: Tuple) -> Tuple:
+    """Prepend None for stacked leading dims (scan stacking)."""
+    return tuple([None] * (len(shape) - len(trailing))) + tuple(trailing)
+
+
+# --------------------------------------------------------------------------- #
+# parameter specs
+# --------------------------------------------------------------------------- #
+def _param_rule(cfg: ModelConfig, pol: ShardingPolicy, path: Tuple[str, ...],
+                shape: Tuple[int, ...]) -> Tuple:
+    tp, fs = pol.tp_axis, pol.fsdp_axis
+    name = path[-1]
+    in_moe_ffn = (cfg.family == "moe" and "ffn" in path)
+
+    if name == "embed":
+        return (tp, fs)
+    if name == "lm_head":
+        return (fs, tp)
+    if name == "enc_pos":
+        return (None, None)
+    if name in ("scale", "A_log", "D", "dt_bias"):
+        return (None,)
+    if name == "norm_scale":
+        return (tp,)
+    if name in ("bq", "bk", "bv", "conv_b"):
+        return (tp,)
+    if name == "conv_w":
+        return (None, tp)
+    if name == "router":
+        return (fs, None)
+    if in_moe_ffn and name in ("w_gate", "w_up"):
+        return (None, fs, tp)
+    if in_moe_ffn and name == "w_down":
+        return (None, tp, fs)
+    if name in ("wq", "wk", "wv", "w_gate", "w_up"):
+        return (fs, tp)
+    if name in ("wo", "w_down"):
+        return (tp, fs)
+    if name in ("wq_a", "wkv_a"):
+        return (fs, None)
+    if name in ("wq_b", "wk_b", "wv_b"):
+        return (None, tp)
+    if name == "w":  # in_proj / out_proj inner linears (mamba blocks)
+        if "out_proj" in path:
+            return (tp, fs)
+        return (fs, tp)
+    if name == "b":
+        return (tp,)
+    return tuple([None] * len(shape))
+
+
+def _path_names(kp) -> Tuple[str, ...]:
+    names = []
+    for k in kp:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_pspecs(cfg: ModelConfig, pol: ShardingPolicy, params_sds) -> Any:
+    def one(kp, leaf):
+        path = _path_names(kp)
+        rule = _param_rule(cfg, pol, path, leaf.shape)
+        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule))
+
+    return jax.tree_util.tree_map_with_path(one, params_sds)
+
+
+def opt_pspecs(cfg: ModelConfig, pol: ShardingPolicy, opt_sds) -> Any:
+    """m/v mirror param shardings; step counter replicated."""
+    def one(kp, leaf):
+        path = _path_names(kp)
+        if path and path[0] == "step":
+            return P()
+        # strip leading "m"/"v" so the param rules see the real path
+        rule_path = path[1:] if path and path[0] in ("m", "v") else path
+        rule = _param_rule(cfg, pol, rule_path, leaf.shape)
+        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule))
+
+    return jax.tree_util.tree_map_with_path(one, opt_sds)
+
+
+# --------------------------------------------------------------------------- #
+# batch / cache / output specs
+# --------------------------------------------------------------------------- #
+def _batch_entry(pol: ShardingPolicy, B: int, ignore_replicate: bool = False):
+    """Longest prefix of the batch-axis preference list that divides B."""
+    if pol.replicate_batch and not ignore_replicate:
+        return None
+    pref = pol.batch_axes_pref
+    for k in range(len(pref), 0, -1):
+        cand = pref[:k]
+        if B % int(np.prod([pol.mesh.shape[a] for a in cand])) == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+
+def activation_shard_flags(pol: ShardingPolicy, B: int, S: int) -> Dict[str, Any]:
+    """Value for flags['act_shard']: hidden-state constraint per cell.
+
+    Hidden states (B, S, D) -> P(batch, model, None): batch over the data
+    axes, sequence over the model axis (Megatron-style sequence parallelism —
+    residual-stream tensors and remat-saved scan carries shrink by tp_size;
+    XLA inserts the all-gather at each matmul entry / reduce-scatter at exit).
+    """
+    b = _batch_entry(pol, B)
+    bsz = 1 if b is None else _axis_size(pol.mesh, b)
+    b_axes = (b,) if isinstance(b, str) else (b or ())
+    seq = None
+    if (S > 1 and S % pol.tp_size == 0 and pol.tp_axis not in b_axes):
+        seq = pol.tp_axis
+    return {"batch": b, "batch_size": bsz,
+            "seq": seq, "seq_size": pol.tp_size if seq else 1}
+
+
+def batch_pspecs(cfg: ModelConfig, pol: ShardingPolicy, batch_sds) -> Any:
+    def one(kp, leaf):
+        b = _batch_entry(pol, leaf.shape[0])
+        rest = [None] * (len(leaf.shape) - 1)
+        return _sanitize(pol.mesh, leaf.shape, (b, *rest))
+
+    return jax.tree_util.tree_map_with_path(one, batch_sds)
+
+
+def cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy, cache_sds) -> Any:
+    """KV caches: (stack..., B, S, H, D) -> seq sharded on tp; ssm states:
+    heads sharded on tp. Batch on batch axes when divisible.
+
+    Under decode-2D-TP (replicate_batch) the cache KEEPS its batch sharding:
+    attention then stays shard-local over batch slices while hidden states
+    replicate — weight gathers turn into small activation collectives."""
+    tp = pol.tp_axis
+
+    def one(kp, leaf):
+        path = _path_names(kp)
+        name = path[-1]
+        shape = leaf.shape
+        nstack = 2 if "groups" in path and name in ("conv", "ssm") else 1
+        b = _batch_entry(pol, shape[nstack], ignore_replicate=True)
+        if name in ("xk", "xv"):                      # whisper cross KV (F=1500)
+            spec = (None, b, None, None, None)
+        elif name in ("k", "v") or name.endswith("_k") or name.endswith("_v"):
+            spec = (None, b, tp, None, None)
+        elif name == "ckv":                           # MLA latent
+            spec = (None, b, tp, None)
+        elif name == "pos" or name.endswith("_pos"):
+            spec = (None, b, tp)
+        elif name == "conv":
+            spec = tuple([None] * nstack) + (b, None, tp)
+        elif name == "ssm":
+            spec = tuple([None] * nstack) + (b, tp, None, None)
+        else:
+            spec = tuple([None] * len(shape))
+        return _sanitize(pol.mesh, shape, spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+# --------------------------------------------------------------------------- #
+# full in/out shardings per step kind
+# --------------------------------------------------------------------------- #
+def _ns(mesh: Mesh, tree):
+    return jax.tree.map(lambda p: NamedSharding(mesh, p), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def step_shardings(cfg: ModelConfig, shape: ShapeSpec, pol: ShardingPolicy,
+                   specs: Dict[str, Any]):
+    """Returns (in_shardings, out_shardings) trees matching step signatures."""
+    mesh = pol.mesh
+    p_params = param_pspecs(cfg, pol, specs["params"])
+    if shape.kind == "train":
+        p_opt = opt_pspecs(cfg, pol, specs["opt_state"])
+        p_batch = batch_pspecs(cfg, pol, specs["batch"])
+        in_sh = (_ns(mesh, p_params), _ns(mesh, p_opt), _ns(mesh, p_batch))
+        out_sh = (NamedSharding(mesh, P()), _ns(mesh, p_params), _ns(mesh, p_opt))
+        return in_sh, out_sh
+    if shape.kind == "prefill":
+        p_batch = batch_pspecs(cfg, pol, specs["batch"])
+        b = _batch_entry(pol, shape.global_batch)
+        out = NamedSharding(mesh, _sanitize(
+            mesh, (shape.global_batch, cfg.vocab_size), (b, pol.tp_axis)))
+        return (_ns(mesh, p_params), _ns(mesh, p_batch)), out
+    # decode
+    p_cache = cache_pspecs(cfg, pol, specs["cache"])
+    b = _batch_entry(pol, shape.global_batch)
+    tok_sh = NamedSharding(mesh, _sanitize(mesh, (shape.global_batch, 1), (b, None)))
+    pos_sh = NamedSharding(mesh, _sanitize(mesh, (shape.global_batch,), (b,)))
+    in_sh = (_ns(mesh, p_params), _ns(mesh, p_cache), tok_sh, pos_sh)
+    out_tok = NamedSharding(mesh, _sanitize(mesh, (shape.global_batch,), (b,)))
+    out_sh = (out_tok, _ns(mesh, p_cache))
+    return in_sh, out_sh

@@ -1,0 +1,122 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+Online-softmax blocked attention: grid = (B·H, Sq/bq, Sk/bk); the TPU grid is
+sequential over the last axis, so the kv-block loop accumulates running
+(max, denom, out) in VMEM scratch.  Causal + sliding-window masking is fused;
+fully-masked kv blocks are skipped via @pl.when.  Block shapes are MXU-aligned
+(multiples of 128 on the lane dim; D padded by the caller if needed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: Optional[int],
+                 softcap: Optional[float], bq: int, bk: int, sk: int, sq: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq + (sk - sq)              # absolute q positions (end-aligned)
+    k_start = ki * bk
+
+    run = jnp.bool_(True)
+    if causal:                                  # skip fully-masked kv blocks
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                    # (bq, D)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        diff = qpos - kpos
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= diff >= 0
+        if window is not None:
+            mask &= diff < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                                 # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(
+                            p.astype(jnp.float32), v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D) head-repeated. Returns (B, Sq, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale = 1.0 / math.sqrt(D)
+
+    # layout: fold heads into batch for a clean 3D grid
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+
+    grid = (B * H, Sq // bq, Sk // bk)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, causal=causal,
+                          window=window, softcap=softcap, bq=bq, bk=bk,
+                          sk=Sk, sq=Sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

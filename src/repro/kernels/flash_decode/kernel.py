@@ -1,0 +1,94 @@
+"""Flash decode — split-KV one-token attention, Pallas TPU kernel.
+
+Grid = (B·H, S/bk): sequential kv blocks accumulate partial softmax state in
+VMEM scratch (FlashDecoding-style rescale-combine).  Valid-length masking
+supports ragged KV prefixes (continuous batching).  KV blocks of 512 keep the
+(bk, D) tiles HBM→VMEM streaming friendly while q stays resident.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                   *, scale: float, bk: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    kv_len = len_ref[0]
+    k_start = ki * bk
+
+    @pl.when(k_start < kv_len)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)                 # (1, D)
+        k = k_ref[0].astype(jnp.float32)                 # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)          # (1, bk)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(kpos < kv_len, jnp.exp(s - m_new), 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = (acc_scr[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v_ref[0].astype(jnp.float32),
+                            (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_decode_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                        kv_len: jax.Array, block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k, v: (B, S, H, D) head-repeated; kv_len: (B,) int32."""
+    B, S, H, D = k.shape
+    bk = min(block_k, S)
+    assert S % bk == 0
+    scale = 1.0 / math.sqrt(D)
+
+    qf = q.reshape(B * H, 1, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+    lens = jnp.repeat(kv_len.astype(jnp.int32), H)           # (B·H,)
+
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, bk=bk),
+        grid=(B * H, S // bk),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, ki: (b, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qf, kf, vf)
+    return out.reshape(B, H, D)

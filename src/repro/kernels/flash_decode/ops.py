@@ -1,0 +1,33 @@
+"""jit'd public wrapper for flash decode (GQA-aware)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_decode.kernel import flash_decode_kernel
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+
+def _repeat_kv(q, k, v):
+    H, Hkv = q.shape[-2], k.shape[2]
+    if Hkv != H:
+        rep = H // Hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    return k, v
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
+                 block_k: int = 512, interpret: bool = True) -> jax.Array:
+    """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: (B,)."""
+    k, v = _repeat_kv(q, k, v)
+    return flash_decode_kernel(q, k, v, kv_len, block_k=block_k,
+                               interpret=interpret)
+
+
+def reference(q, k, v, kv_len):
+    k, v = _repeat_kv(q, k, v)
+    return flash_decode_ref(q, k, v, kv_len)

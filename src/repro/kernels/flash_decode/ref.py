@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for split-KV flash decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array) -> jax.Array:
+    """One-token decode attention.
+
+    q: (B, H, D); k, v: (B, S, H, D) (head-repeated); kv_len: (B,) valid
+    prefix lengths.  Returns (B, H, D).
+    """
+    B, S, H, D = k.shape
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]          # (B, S)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(v.dtype), v)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the grouped (per-expert) SwiGLU matmul."""
+import jax
+import jax.numpy as jnp
+
+
+def moe_gmm_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                w_down: jax.Array) -> jax.Array:
+    """x: (E, C, D) expert-buffered tokens; weights: (E, D, F) / (E, F, D).
+
+    Returns (E, C, D): per-expert SwiGLU FFN.
+    """
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, w_gate))
+    u = jnp.einsum("ecd,edf->ecf", x, w_up)
+    return jnp.einsum("ecf,efd->ecd", g * u, w_down)

@@ -1,0 +1,47 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Row-block tiles (block_rows × D) stream HBM→VMEM once; the f32 reduction,
+rsqrt and scale multiply fuse into a single pass (vs. 3 HBM round-trips for
+the unfused mean/rsqrt/mul chain).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * (1.0 + s_ref[...].astype(jnp.float32))).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+                   block_rows: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (..., D) → same shape; scale: (D,)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    rows = 1
+    for d in orig_shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, D)
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=((rows + pad) // br,),
+        in_specs=[
+            pl.BlockSpec((br, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, D), x.dtype),
+        interpret=interpret,
+    )(x2, scale.reshape(1, D))
+    return out[:rows].reshape(orig_shape)

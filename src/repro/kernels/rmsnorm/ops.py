@@ -1,0 +1,17 @@
+"""jit'd public wrapper for fused RMSNorm."""
+import functools
+
+import jax
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = True):
+    return rmsnorm_kernel(x, scale, eps=eps, block_rows=block_rows,
+                          interpret=interpret)
+
+
+reference = rmsnorm_ref

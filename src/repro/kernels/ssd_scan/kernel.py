@@ -1,0 +1,96 @@
+"""Mamba-2 SSD chunked scan — Pallas TPU kernel.
+
+Grid = (B, H/bh, S/chunk): the chunk axis is last (sequential on TPU), so the
+inter-chunk SSM state lives in a VMEM scratch carried across grid steps —
+intra-chunk quadratic work (L×L decay matrix, scores) happens entirely in
+VMEM on (chunk × headdim/state) tiles.  This is the TPU-native layout of the
+SSD algorithm: MXU does the (l×n)·(n×l) score and (l×l)·(l×p) mixing matmuls,
+the state carry is an (h, p, n) VMEM-resident tensor — no HBM round-trip per
+chunk.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_scr, *,
+                chunk: int, bh: int, p: int, n: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        st_scr[...] = jnp.zeros_like(st_scr)
+
+    x = x_ref[0].astype(jnp.float32)             # (chunk, bh, p)
+    dt = dt_ref[0].astype(jnp.float32)           # (chunk, bh)
+    A = a_ref[...].astype(jnp.float32)           # (1, bh) negative rates
+    Bm = b_ref[0].astype(jnp.float32)            # (chunk, n)
+    Cm = c_ref[0].astype(jnp.float32)            # (chunk, n)
+
+    dA = dt * A                                  # (chunk, bh)
+    cum = jnp.cumsum(dA, axis=0)                 # (chunk, bh)
+    xd = x * dt[..., None]
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None, :] - cum[None, :, :]      # (l, l, bh)
+    il = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jl = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = (il >= jl)[..., None]
+    L = jnp.where(tri, jnp.exp(seg), 0.0)        # (l, l, bh)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (l, l)
+    mix = scores[..., None] * L                  # (l, l, bh)
+    y_diag = jnp.einsum("lmh,mhp->lhp", mix, xd)
+
+    # inter-chunk: contribution of carried state + state update
+    state = st_scr[...]                          # (bh, p, n)
+    state_decay = jnp.exp(cum)                   # (l, bh)
+    y_off = jnp.einsum("ln,hpn,lh->lhp", Cm, state, state_decay)
+
+    decay_to_end = jnp.exp(cum[-1:, :] - cum)    # (l, bh)
+    new_state = jnp.einsum("ln,lh,lhp->hpn", Bm, decay_to_end, xd)
+    chunk_decay = jnp.exp(cum[-1])               # (bh,)
+    st_scr[...] = state * chunk_decay[:, None, None] + new_state
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                    C: jax.Array, chunk: int = 64, block_h: int = 0,
+                    interpret: bool = True):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, 1, n).
+
+    Returns (y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    ck = min(chunk, s)
+    assert s % ck == 0
+    bh = block_h or h
+    assert h % bh == 0
+
+    B2 = B[:, :, 0, :]
+    C2 = C[:, :, 0, :]
+    a2 = A.reshape(1, h)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=ck, bh=bh, p=p, n=n),
+        grid=(b, h // bh, s // ck),
+        in_specs=[
+            pl.BlockSpec((1, ck, bh, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, ck, bh), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, bh), lambda bi, hi, ci: (0, hi)),
+            pl.BlockSpec((1, ck, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, ck, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, ck, bh, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a2, B2, C2)
+    return y

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the Mamba-2 SSD chunked scan (delegates to models.ssd)."""
+import jax
+
+from repro.models.ssd import ssd_chunked
+
+
+def ssd_scan_ref(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                 C: jax.Array, chunk: int = 64):
+    """x: (b, s, h, p); dt: (b, s, h); A: (h,); B, C: (b, s, 1, n)."""
+    return ssd_chunked(x, dt, A, B, C, chunk)

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) cell
+on the production meshes and extract memory / cost / collective analysis.
+
+MUST be invoked as its own process (``python -m repro.launch.dryrun``) so the
+512 placeholder host devices exist before jax initialises.  Results are cached
+to benchmarks/artifacts/dryrun/*.json; benchmarks and EXPERIMENTS.md read the
+JSON instead of re-compiling.
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.distributed.hlo_analysis import RooflineTerms, analyze_hlo
+from repro.distributed.sharding import (activation_shard_flags, make_policy,
+                                        step_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import flags, zoo
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful whole-step FLOPs: 6·N·D train, 2·N·D forward (MoE: N_active)."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+             replicate_batch: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "moe_impl": flags.get_flag("moe_impl"),
+           "remat": flags.get_flag("remat"),
+           "status": "skipped", "skip_reason": why}
+    if not ok:
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pol = make_policy(mesh, cfg)
+    if replicate_batch:
+        import dataclasses as _dc
+        pol = _dc.replace(pol, replicate_batch=True)
+    rec["sharding_mode"] = pol.mode
+    rec["replicate_batch"] = replicate_batch
+    s_act = shape.seq_len if shape.kind != "decode" else 1
+    flags.set_flag("act_shard",
+                   activation_shard_flags(pol, shape.global_batch, s_act))
+    specs = zoo.input_specs(cfg, shape)
+    step = zoo.step_fn_for(cfg, shape)
+    in_sh, out_sh = step_shardings(cfg, shape, pol, specs)
+
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        if shape.kind == "train":
+            lowered = jitted.lower(specs["params"], specs["opt_state"], specs["batch"])
+        elif shape.kind == "prefill":
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:
+            lowered = jitted.lower(specs["params"], specs["cache"],
+                                   specs["tokens"], specs["positions"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        ana = analyze_hlo(hlo)
+
+    n_chips = mesh.devices.size
+    terms = RooflineTerms(
+        hlo_flops=ana.flops,
+        hlo_bytes=ana.bytes_accessed,
+        collective_bytes=ana.collective_bytes,
+        n_chips=n_chips,
+        model_flops=model_flops(cfg, shape),
+    )
+    rec.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_live_bytes": (mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+        },
+        "collectives": {"by_kind_bytes": ana.collective_by_kind,
+                        "by_kind_count": ana.collective_count,
+                        "summary": ana.summary()},
+        "roofline": terms.as_dict(),
+        "cost_analysis_raw": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "hlo_size": len(hlo),
+    })
+    if verbose:
+        m = rec["memory"]
+        print(f"[dryrun] {arch} × {shape_name} × {mesh_name}: "
+              f"compile={t_compile:.1f}s "
+              f"args/dev={m['argument_bytes']/2**30:.2f}GiB "
+              f"temp/dev={m['temp_bytes']/2**30:.2f}GiB "
+              f"flops/dev={terms.hlo_flops:.3e} "
+              f"coll={ana.collective_bytes/2**20:.1f}MiB "
+              f"dominant={terms.dominant} "
+              f"roofline_frac={terms.roofline_fraction:.3f}")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis_raw[flops]={cost.get('flops')} "
+              f"[bytes accessed]={cost.get('bytes accessed')}")
+        print(f"  collectives: {ana.summary()}")
+    return rec
+
+
+def cell_path(arch: str, shape_name: str, mesh_name: str, tag: str = "") -> Path:
+    suffix = f"__{tag}" if tag else ""
+    return ARTIFACT_DIR / f"{arch}__{shape_name}__{mesh_name}{suffix}.json"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--moe-impl", default=None, choices=[None, "dense", "dispatch"])
+    ap.add_argument("--remat", default=None, choices=[None, "full", "dots", "none"])
+    ap.add_argument("--q-chunk", default=None, type=int)
+    ap.add_argument("--attn-scores", default=None, choices=[None, "f32", "bf16"])
+    ap.add_argument("--replicate-batch", action="store_true",
+                    help="decode-2D-TP: replicate decode batch (§Perf)")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    args = ap.parse_args()
+
+    if args.moe_impl:
+        flags.set_flag("moe_impl", args.moe_impl)
+    if args.remat:
+        flags.set_flag("remat", args.remat)
+    if args.q_chunk is not None:
+        flags.set_flag("q_chunk", args.q_chunk)
+    if args.attn_scores:
+        flags.set_flag("attn_scores", args.attn_scores)
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for multi_pod in meshes:
+                mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+                path = cell_path(arch, shape_name, mesh_name, args.tag)
+                if path.exists() and not args.force:
+                    print(f"[dryrun] cached: {path.name}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod,
+                                   replicate_batch=args.replicate_batch)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}"}
+                    failures.append((arch, shape_name, mesh_name))
+                path.write_text(json.dumps(rec, indent=2))
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        return 1
+    print("[dryrun] all requested cells done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

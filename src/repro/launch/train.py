@@ -1,0 +1,48 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--steps N]``.
+
+Runs the fault-tolerant training loop on the host devices (reduced config by
+default; ``--full`` uses the real architecture — production-mesh execution is
+exercised via the dry-run, since this container has one CPU device).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config, list_archs
+from repro.training import data as data_lib
+from repro.training import optim
+from repro.training.trainer import TrainConfig, train
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full architecture config (large!)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    dcfg = data_lib.DataConfig(vocab_size=cfg.vocab_size,
+                               seq_len=args.seq_len, global_batch=args.batch)
+    tcfg = TrainConfig(steps=args.steps, microbatches=args.microbatches,
+                       ckpt_dir=args.ckpt_dir,
+                       opt=optim.AdamWConfig(lr=args.lr, warmup_steps=20))
+    report = train(cfg, tcfg, dcfg,
+                   on_step=lambda s, l: print(f"step {s:5d} loss {l:.4f}")
+                   if s % 10 == 0 else None)
+    print(f"done: {report.steps_done} steps, final loss "
+          f"{report.losses[-1]:.4f}, nan-skips {report.skipped_nan}, "
+          f"stragglers {report.straggler_events}, resumed={report.resumed_from}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,2 @@
+"""JAX model zoo for the 10 assigned architectures."""
+from repro.models import flags, layers, lm, ssd, zoo  # noqa: F401

@@ -1,0 +1,36 @@
+"""Runtime implementation switches used by the §Perf hillclimb.
+
+Defaults are the paper-faithful / naive-XLA baselines; the optimized settings
+are flipped by benchmarks and the launcher via ``set_flag``.
+"""
+from __future__ import annotations
+
+import os
+
+_FLAGS = {
+    # "dense"   : compute-all-experts weighted mix (baseline)
+    # "dispatch": capacity-based scatter dispatch (optimized)
+    "moe_impl": os.environ.get("REPRO_MOE_IMPL", "dense"),
+    # "xla"    : jnp attention (baseline)   "pallas": flash kernels (TPU target)
+    "attn_impl": os.environ.get("REPRO_ATTN_IMPL", "xla"),
+    # remat policy for the layer scan: "full" | "dots" | "none"
+    "remat": os.environ.get("REPRO_REMAT", "full"),
+    # query chunk for long-sequence attention lowering
+    "q_chunk": int(os.environ.get("REPRO_Q_CHUNK", "2048")),
+    # attention score accumulation dtype: "f32" (baseline) | "bf16"
+    # (halves score-tensor HBM traffic; max/sum still f32 inside softmax)
+    "attn_scores": os.environ.get("REPRO_ATTN_SCORES", "f32"),
+    # activation sharding constraints, set by the launcher per cell:
+    # None or {"batch": axis-entry, "batch_size": int, "seq": entry, "seq_size": int}
+    "act_shard": None,
+}
+
+
+def get_flag(name: str):
+    return _FLAGS[name]
+
+
+def set_flag(name: str, value) -> None:
+    if name not in _FLAGS:
+        raise KeyError(name)
+    _FLAGS[name] = value

@@ -1,0 +1,463 @@
+"""Unified language model covering all 10 assigned architectures.
+
+Layer-stack patterns (all compile-time static):
+  * uniform   — dense / moe / vlm / ssm: ``lax.scan`` over L stacked layers
+  * pairs     — gemma2: scan over L/2 (local, global) pairs
+  * groups    — zamba2: scan over groups of (attn_every-1 mamba + shared attn)
+  * encdec    — whisper: encoder scan + decoder scan with cross-attention
+
+``forward`` is used by train/prefill (full sequence); ``decode_step`` advances
+one token against a KV/SSM cache.  ``init_cache`` defines the cache pytree —
+``jax.eval_shape`` over it yields the dry-run ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models.layers import (
+    attention_fwd,
+    init_attention,
+    init_linear,
+    init_mla,
+    init_moe,
+    init_rmsnorm,
+    init_swiglu,
+    mla_fwd,
+    moe_dense_mix,
+    moe_dispatch,
+    rmsnorm,
+    shard_hidden,
+    softcap,
+    swiglu,
+)
+from repro.models.ssd import init_mamba2, mamba2_fwd
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# per-layer init / fwd
+# --------------------------------------------------------------------------- #
+def _init_decoder_layer(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {"ln1": init_rmsnorm(cfg.d_model), "ln2": init_rmsnorm(cfg.d_model)}
+    if cfg.mla is not None:
+        p["attn"] = init_mla(ks[0], cfg)
+    else:
+        p["attn"] = init_attention(ks[0], cfg)
+    if cfg.family == "moe":
+        p["ffn"] = init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff)
+    if cross:
+        p["ln_x"] = init_rmsnorm(cfg.d_model)
+        p["xattn"] = init_attention(ks[2], cfg)
+    return p
+
+
+def _ffn_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.family == "moe":
+        impl = flags.get_flag("moe_impl")
+        return (moe_dispatch if impl == "dispatch" else moe_dense_mix)(p, cfg, x)
+    return swiglu(p, x)
+
+
+def _decoder_layer_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+                       positions: jax.Array, window: Optional[int],
+                       cache=None, enc_out=None, xattn_cache=None):
+    """Pre-norm decoder layer. Returns (x, new_cache, new_xattn_cache)."""
+    q_chunk = flags.get_flag("q_chunk")
+    h = rmsnorm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.mla is not None:
+        if cache is None:
+            attn_out, new_cache = mla_fwd(p["attn"], cfg, h, positions,
+                                          q_chunk=q_chunk)
+        else:
+            attn_out, new_cache = mla_fwd(p["attn"], cfg, h, positions,
+                                          kv_cache=cache[0], cache_positions=cache[1],
+                                          q_chunk=q_chunk)
+    else:
+        if cache is None:
+            attn_out, new_cache = attention_fwd(p["attn"], cfg, h, positions, window,
+                                                q_chunk=q_chunk)
+        else:
+            attn_out, new_cache = attention_fwd(
+                p["attn"], cfg, h, positions, window,
+                kv_cache=(cache[0], cache[1]), cache_positions=cache[2],
+                q_chunk=q_chunk)
+    x = x + attn_out
+    new_xattn = None
+    if enc_out is not None or xattn_cache is not None:
+        h = rmsnorm(x, p["ln_x"]["scale"], cfg.norm_eps)
+        if xattn_cache is not None:
+            xk, xv = xattn_cache
+        else:
+            B, F, _ = enc_out.shape
+            xk = (enc_out @ p["xattn"]["wk"].astype(x.dtype)).reshape(
+                B, F, cfg.n_kv_heads, cfg.d_head)
+            xv = (enc_out @ p["xattn"]["wv"].astype(x.dtype)).reshape(
+                B, F, cfg.n_kv_heads, cfg.d_head)
+        xout, _ = attention_fwd(p["xattn"], cfg, h, positions, None,
+                                xattn_kv=(xk, xv), causal=False, q_chunk=q_chunk)
+        x = x + xout
+        new_xattn = (xk, xv)
+    h = rmsnorm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + _ffn_fwd(p["ffn"], cfg, h)
+    return shard_hidden(x), new_cache, new_xattn
+
+
+def _init_mamba_layer(key, cfg: ModelConfig) -> Params:
+    return {"ln": init_rmsnorm(cfg.d_model), "mixer": init_mamba2(key, cfg)}
+
+
+def _mamba_layer_fwd(p: Params, cfg: ModelConfig, x: jax.Array, state=None):
+    h = rmsnorm(x, p["ln"]["scale"], cfg.norm_eps)
+    out, new_state = mamba2_fwd(p["mixer"], cfg, h, state)
+    return shard_hidden(x + out), new_state
+
+
+# --------------------------------------------------------------------------- #
+# model init
+# --------------------------------------------------------------------------- #
+def _stack_init(init_fn, key, n: int) -> Params:
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(cfg.d_model)
+    p: Params = {
+        "embed": jax.random.uniform(ks[0], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32, -scale, scale),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.uniform(ks[1], (cfg.d_model, cfg.vocab_size),
+                                          jnp.float32, -scale, scale)
+
+    if cfg.family == "ssm":
+        p["layers"] = _stack_init(lambda k: _init_mamba_layer(k, cfg), ks[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        per_group = cfg.attn_every - 1
+        trailing = cfg.n_layers - G * cfg.attn_every
+        p["mamba_groups"] = jax.vmap(
+            lambda k: _stack_init(lambda kk: _init_mamba_layer(kk, cfg), k, per_group)
+        )(jax.random.split(ks[2], G))
+        if trailing:
+            p["mamba_tail"] = _stack_init(lambda k: _init_mamba_layer(k, cfg),
+                                          ks[3], trailing)
+        p["shared_attn"] = _init_decoder_layer(ks[4], cfg)
+    elif cfg.local_global_every == 2:
+        L2 = cfg.n_layers // 2
+        p["layer_pairs"] = jax.vmap(
+            lambda k: _stack_init(lambda kk: _init_decoder_layer(kk, cfg), k, 2)
+        )(jax.random.split(ks[2], L2))
+    elif cfg.is_encoder_decoder:
+        p["enc_pos"] = jax.random.uniform(ks[5], (cfg.n_frames, cfg.d_model),
+                                          jnp.float32, -scale, scale)
+        p["enc_layers"] = _stack_init(lambda k: _init_decoder_layer(k, cfg),
+                                      ks[2], cfg.n_encoder_layers)
+        p["enc_norm"] = init_rmsnorm(cfg.d_model)
+        p["layers"] = _stack_init(lambda k: _init_decoder_layer(k, cfg, cross=True),
+                                  ks[3], cfg.n_layers)
+    else:
+        p["layers"] = _stack_init(lambda k: _init_decoder_layer(k, cfg),
+                                  ks[2], cfg.n_layers)
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# remat helper
+# --------------------------------------------------------------------------- #
+def _maybe_remat(fn):
+    pol = flags.get_flag("remat")
+    if pol == "none":
+        return fn
+    if pol == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# --------------------------------------------------------------------------- #
+# forward (full sequence: train / prefill)
+# --------------------------------------------------------------------------- #
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array,
+            frames: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence forward. tokens: (B, S) int32 → logits (B, S, V)."""
+    B, S = tokens.shape
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.local_global_every:          # gemma-style embedding normalizer
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    x = shard_hidden(x)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    if cfg.family == "ssm":
+        def body(h, lp):
+            h, _ = _mamba_layer_fwd(lp, cfg, h)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+
+        def group_body(h, glp):
+            def inner(h2, lp):
+                h2, _ = _mamba_layer_fwd(lp, cfg, h2)
+                return h2, None
+            h, _ = jax.lax.scan(inner, h, glp)
+            h, _, _ = _decoder_layer_fwd(shared, cfg, h, positions, None)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(group_body), x, params["mamba_groups"])
+        if "mamba_tail" in params:
+            def tail(h, lp):
+                h, _ = _mamba_layer_fwd(lp, cfg, h)
+                return h, None
+            x, _ = jax.lax.scan(_maybe_remat(tail), x, params["mamba_tail"])
+
+    elif cfg.local_global_every == 2:
+        def pair_body(h, lp2):
+            loc = jax.tree.map(lambda t: t[0], lp2)
+            glob = jax.tree.map(lambda t: t[1], lp2)
+            h, _, _ = _decoder_layer_fwd(loc, cfg, h, positions, cfg.sliding_window)
+            h, _, _ = _decoder_layer_fwd(glob, cfg, h, positions, None)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(pair_body), x, params["layer_pairs"])
+
+    elif cfg.is_encoder_decoder:
+        assert frames is not None, "whisper forward requires frame embeddings"
+        enc = frames.astype(dtype) + params["enc_pos"][None].astype(dtype)
+        fpos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1], dtype=jnp.int32)[None], enc.shape[:2])
+
+        def enc_body(h, lp):
+            hh = rmsnorm(h, lp["ln1"]["scale"], cfg.norm_eps)
+            o, _ = attention_fwd(lp["attn"], cfg, hh, fpos, None, causal=False,
+                                 q_chunk=flags.get_flag("q_chunk"))
+            h = h + o
+            hh = rmsnorm(h, lp["ln2"]["scale"], cfg.norm_eps)
+            return h + swiglu(lp["ffn"], hh), None
+        enc, _ = jax.lax.scan(_maybe_remat(enc_body), enc, params["enc_layers"])
+        enc = rmsnorm(enc, params["enc_norm"]["scale"], cfg.norm_eps)
+
+        def dec_body(h, lp):
+            h, _, _ = _decoder_layer_fwd(lp, cfg, h, positions, None, enc_out=enc)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(dec_body), x, params["layers"])
+
+    else:
+        window = cfg.sliding_window
+
+        def body(h, lp):
+            h, _, _ = _decoder_layer_fwd(lp, cfg, h, positions, window)
+            return h, None
+        x, _ = jax.lax.scan(_maybe_remat(body), x, params["layers"])
+
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits
+
+
+# --------------------------------------------------------------------------- #
+# cache
+# --------------------------------------------------------------------------- #
+def _kv_zeros(cfg: ModelConfig, n: int, B: int, S: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((n, B, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "v": jnp.zeros((n, B, S, cfg.n_kv_heads, cfg.d_head), dtype),
+        "pos": jnp.full((n, B, S), -1, jnp.int32),
+    }
+
+
+def _ssm_zeros(cfg: ModelConfig, shape_prefix, B: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    nh = s.n_heads(cfg.d_model)
+    return {
+        "conv": jnp.zeros((*shape_prefix, B, s.d_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((*shape_prefix, B, nh, s.head_dim, s.d_state), dtype),
+    }
+
+
+def cache_seq_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Physical KV buffer length (rolling buffer for pure-SWA archs)."""
+    if cfg.sliding_window is not None and cfg.local_global_every == 0:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ModelConfig, B: int, seq_len: int, dtype=jnp.bfloat16) -> Params:
+    """Zero-filled cache pytree for decoding up to ``seq_len`` positions."""
+    S = cache_seq_len(cfg, seq_len)
+    if cfg.family == "ssm":
+        return _ssm_zeros(cfg, (cfg.n_layers,), B, dtype)
+    if cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        per_group = cfg.attn_every - 1
+        trailing = cfg.n_layers - G * cfg.attn_every
+        c = {"groups": _ssm_zeros(cfg, (G, per_group), B, dtype)}
+        c.update({f"attn_{k}": v for k, v in
+                  _kv_zeros(cfg, G, B, seq_len, dtype).items()})
+        if trailing:
+            c["tail"] = _ssm_zeros(cfg, (trailing,), B, dtype)
+        return c
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "ckv": jnp.zeros((cfg.n_layers, B, S, m.kv_lora_rank + m.qk_rope_head_dim),
+                             dtype),
+            "pos": jnp.full((cfg.n_layers, B, S), -1, jnp.int32),
+        }
+    if cfg.local_global_every == 2:
+        L2 = cfg.n_layers // 2
+        Sl = min(cfg.sliding_window, seq_len)
+        c = {f"loc_{k}": v for k, v in _kv_zeros(cfg, L2, B, Sl, dtype).items()}
+        c.update({f"glob_{k}": v for k, v in _kv_zeros(cfg, L2, B, seq_len, dtype).items()})
+        return c
+    if cfg.is_encoder_decoder:
+        c = _kv_zeros(cfg, cfg.n_layers, B, S, dtype)
+        c["xk"] = jnp.zeros((cfg.n_layers, B, cfg.n_frames, cfg.n_kv_heads, cfg.d_head),
+                            dtype)
+        c["xv"] = jnp.zeros_like(c["xk"])
+        return c
+    return _kv_zeros(cfg, cfg.n_layers, B, S, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# decode step
+# --------------------------------------------------------------------------- #
+def decode_step(params: Params, cfg: ModelConfig, cache: Params,
+                tokens: jax.Array, positions: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One decoding step. tokens: (B, 1) int32; positions: (B,) int32.
+
+    Returns (logits (B, 1, V), updated cache).
+    """
+    B = tokens.shape[0]
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.local_global_every:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    pos2 = positions[:, None]                                  # (B,1)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm = xs
+            h, (c2, s2) = _mamba_layer_fwd(lp, cfg, h, state=(conv, ssm))
+            return h, (c2, s2)
+        x, (c2, s2) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["conv"], cache["ssm"]))
+        new_cache = {"conv": c2, "ssm": s2}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        window = None
+
+        def group_body(h, xs):
+            glp, conv, ssm, kc, vc, pc = xs
+
+            def inner(h2, ys):
+                lp, c1, s1 = ys
+                h2, (c2, s2) = _mamba_layer_fwd(lp, cfg, h2, state=(c1, s1))
+                return h2, (c2, s2)
+            h, (c2, s2) = jax.lax.scan(inner, h, (glp, conv, ssm))
+            h, kv, _ = _decoder_layer_fwd(shared, cfg, h, pos2, window,
+                                          cache=(kc, vc, pc))
+            return h, (c2, s2, *kv)
+        x, (c2, s2, K, V, P) = jax.lax.scan(
+            group_body, x,
+            (params["mamba_groups"], cache["groups"]["conv"], cache["groups"]["ssm"],
+             cache["attn_k"], cache["attn_v"], cache["attn_pos"]))
+        new_cache = {"groups": {"conv": c2, "ssm": s2},
+                     "attn_k": K, "attn_v": V, "attn_pos": P}
+        if "mamba_tail" in params:
+            def tail(h, xs):
+                lp, c1, s1 = xs
+                h, (c2t, s2t) = _mamba_layer_fwd(lp, cfg, h, state=(c1, s1))
+                return h, (c2t, s2t)
+            x, (ct, st) = jax.lax.scan(tail, x, (params["mamba_tail"],
+                                                 cache["tail"]["conv"],
+                                                 cache["tail"]["ssm"]))
+            new_cache["tail"] = {"conv": ct, "ssm": st}
+
+    elif cfg.mla is not None:
+        def body(h, xs):
+            lp, ckv, pc = xs
+            h, nc, _ = _decoder_layer_fwd(lp, cfg, h, pos2, None, cache=(ckv, pc))
+            return h, nc
+        x, (CKV, P) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["ckv"], cache["pos"]))
+        new_cache = {"ckv": CKV, "pos": P}
+
+    elif cfg.local_global_every == 2:
+        def pair_body(h, xs):
+            lp2, kl, vl, pl, kg, vg, pg = xs
+            loc = jax.tree.map(lambda t: t[0], lp2)
+            glob = jax.tree.map(lambda t: t[1], lp2)
+            h, kvl, _ = _decoder_layer_fwd(loc, cfg, h, pos2, cfg.sliding_window,
+                                           cache=(kl, vl, pl))
+            h, kvg, _ = _decoder_layer_fwd(glob, cfg, h, pos2, None,
+                                           cache=(kg, vg, pg))
+            return h, (*kvl, *kvg)
+        x, (KL, VL, PL, KG, VG, PG) = jax.lax.scan(
+            pair_body, x,
+            (params["layer_pairs"], cache["loc_k"], cache["loc_v"], cache["loc_pos"],
+             cache["glob_k"], cache["glob_v"], cache["glob_pos"]))
+        new_cache = {"loc_k": KL, "loc_v": VL, "loc_pos": PL,
+                     "glob_k": KG, "glob_v": VG, "glob_pos": PG}
+
+    elif cfg.is_encoder_decoder:
+        def body(h, xs):
+            lp, kc, vc, pc, xk, xv = xs
+            h, kv, _ = _decoder_layer_fwd(lp, cfg, h, pos2, None,
+                                          cache=(kc, vc, pc), xattn_cache=(xk, xv))
+            return h, kv
+        x, (K, V, P) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"], cache["pos"],
+                      cache["xk"], cache["xv"]))
+        new_cache = {"k": K, "v": V, "pos": P,
+                     "xk": cache["xk"], "xv": cache["xv"]}
+
+    else:
+        window = cfg.sliding_window
+
+        def body(h, xs):
+            lp, kc, vc, pc = xs
+            h, kv, _ = _decoder_layer_fwd(lp, cfg, h, pos2, window,
+                                          cache=(kc, vc, pc))
+            return h, kv
+        x, (K, V, P) = jax.lax.scan(body, x, (params["layers"],
+                                              cache["k"], cache["v"], cache["pos"]))
+        new_cache = {"k": K, "v": V, "pos": P}
+
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+def mask_cache_update(cfg: ModelConfig, old_cache: Params, new_cache: Params,
+                      active: jax.Array) -> Params:
+    """Keep updates only for active batch slots (continuous batching: inactive
+    slots' spurious decode writes — positional KV or recurrent SSM state —
+    are rolled back).  ``active``: (B,) bool."""
+    def one(kp, old, new):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in kp]
+        nstack = 2 if ("groups" in names and names[-1] in ("conv", "ssm")) else 1
+        m = active.reshape([1] * nstack + [-1] + [1] * (old.ndim - nstack - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree_util.tree_map_with_path(one, old_cache, new_cache)

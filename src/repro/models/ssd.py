@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form + decode step.
+
+Follows the minimal-mamba2 formulation [arXiv:2405.21060]: intra-chunk dense
+(quadratic within chunk_size), inter-chunk linear recurrence over chunk states.
+The Pallas kernel in repro.kernels.ssd_scan implements the same math with
+explicit VMEM tiling; this module is the pjit-traceable reference path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+Params = Dict[str, Any]
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L). Returns (..., L, L) with out[i,j] = sum_{k=j+1..i} x[k] (i>=j)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    s: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d)
+    # dt bias initialised so softplus(dt_bias) spans [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,)) * (math.log(0.1) - math.log(1e-3))
+                 + math.log(1e-3))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": {"w": jax.random.uniform(
+            ks[0], (d, 2 * di + 2 * s.n_groups * s.d_state + nh), jnp.float32, -sc, sc)},
+        "conv_w": jax.random.uniform(ks[1], (s.d_conv, conv_dim), jnp.float32,
+                                     -1.0 / math.sqrt(s.d_conv), 1.0 / math.sqrt(s.d_conv)),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": {"w": jax.random.uniform(ks[3], (di, d), jnp.float32,
+                                             -1.0 / math.sqrt(di), 1.0 / math.sqrt(di))},
+    }
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    x: (b, s, h, p)   dt: (b, s, h)   A: (h,) negative decay rates
+    B, C: (b, s, g, n) with g == 1 (broadcast over heads)
+    Returns y: (b, s, h, p) and final_state: (b, h, p, n).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+
+    xd = x * dt.astype(x.dtype)[..., None]                  # dt-weighted input
+    dA = dt * A[None, None, :]                              # (b, s, h), negative
+
+    def r(t, l):  # reshape seq into chunks
+        return t.reshape(b, nc, l, *t.shape[2:])
+
+    xc, dAc = r(xd, chunk), r(dA, chunk)
+    Bc, Cc = r(B, chunk), r(C, chunk)                       # (b,c,l,g,n) g=1
+    Bc, Cc = Bc[..., 0, :], Cc[..., 0, :]                   # (b,c,l,n)
+
+    cum = jnp.cumsum(dAc, axis=2)                           # (b,c,l,h)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dAc.transpose(0, 1, 3, 2)))      # (b,c,h,l,l)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)          # (b,c,l,m)
+    y_diag = jnp.einsum("bclm,bchlm,bcmhp->bclhp",
+                        scores, Lmat.astype(x.dtype), xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)         # (b,c,l,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn",
+                        Bc, decay_states.astype(x.dtype), xc)
+
+    # 3. inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (b,c,h)
+    init = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+            else initial_state.astype(x.dtype))
+
+    def step(carry, inp):
+        st, dec = inp                                       # (b,h,p,n), (b,h)
+        prev = carry
+        new = prev * dec[:, :, None, None].astype(x.dtype) + st
+        return new, prev
+
+    final_state, prev_states = jax.lax.scan(
+        step,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,c,h,p,n)
+
+    # 4. state -> output contribution
+    state_decay = jnp.exp(cum)                              # (b,c,l,h)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp",
+                       Cc, prev_states, state_decay.astype(x.dtype))
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+              for i in range(K))
+    return out + b[None, None, :].astype(x.dtype)
+
+
+def mamba2_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+               state: Optional[Tuple[jax.Array, jax.Array]] = None
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Mamba-2 block. x: (B, S, d).
+
+    state = (conv_state (B, d_conv-1, conv_dim), ssm_state (B, h, p, n)) for
+    decode (S==1); None for full-sequence processing.
+    Returns (y, new_state).
+    """
+    s: SSMConfig = cfg.ssm
+    B_, S, d = x.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = s.n_groups * s.d_state
+    conv_dim = di + 2 * gn
+
+    zxbcdt = x @ p["in_proj"]["w"].astype(x.dtype)
+    z, xBC, dt_raw = jnp.split(zxbcdt, [di, di + conv_dim], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"][None, None, :])      # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                 # (nh,) negative
+
+    if state is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs, Bmat, Cmat = jnp.split(xBC, [di, di + gn], axis=-1)
+        xs = xs.reshape(B_, S, nh, s.head_dim)
+        Bmat = Bmat.reshape(B_, S, s.n_groups, s.d_state)
+        Cmat = Cmat.reshape(B_, S, s.n_groups, s.d_state)
+        y, fin = ssd_chunked(xs, dt, A, Bmat, Cmat, min(s.chunk_size, S))
+        conv_tail_len = s.d_conv - 1
+        # conv state for potential continuation: last d_conv-1 pre-activation inputs
+        conv_state = jax.lax.dynamic_slice_in_dim(
+            zxbcdt[..., di:di + conv_dim], max(S - conv_tail_len, 0),
+            min(conv_tail_len, S), axis=1)
+        if S < conv_tail_len:
+            conv_state = jnp.pad(conv_state, ((0, 0), (conv_tail_len - S, 0), (0, 0)))
+        new_state = (conv_state, fin)
+    else:
+        conv_state, ssm_state = state
+        xBC_t = zxbcdt[..., di:di + conv_dim]                # (B,1,conv_dim)
+        window = jnp.concatenate([conv_state, xBC_t], axis=1)  # (B,d_conv,conv_dim)
+        conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+        xBC1 = jax.nn.silu(conv.astype(x.dtype))[:, None, :]
+        xs, Bmat, Cmat = jnp.split(xBC1, [di, di + gn], axis=-1)
+        xs = xs.reshape(B_, nh, s.head_dim)
+        Bv = Bmat.reshape(B_, s.n_groups, s.d_state)[:, 0]   # (B,n)
+        Cv = Cmat.reshape(B_, s.n_groups, s.d_state)[:, 0]
+        dt1 = dt[:, 0]                                       # (B,nh)
+        dA = jnp.exp(dt1 * A[None, :])                       # (B,nh)
+        upd = jnp.einsum("bhp,bn->bhpn", xs * dt1[..., None].astype(x.dtype),
+                         Bv)
+        ssm_new = ssm_state * dA[..., None, None].astype(x.dtype) + upd
+        y = jnp.einsum("bhpn,bn->bhp", ssm_new, Cv)[:, None]  # (B,1,nh,p)
+        y = y.reshape(B_, 1, nh, s.head_dim)
+        new_state = (window[:, 1:], ssm_new)
+        xs = xs[:, None]
+
+    y = y + xs * p["D"][None, None, :, None].astype(x.dtype)
+    y = y.reshape(B_, S, di)
+    # gated RMSNorm then output projection
+    y = y * jax.nn.silu(z)
+    dtv = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm_scale"][None, None, :])).astype(dtv)
+    return y @ p["out_proj"]["w"].astype(x.dtype), new_state

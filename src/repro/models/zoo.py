@@ -1,0 +1,125 @@
+"""Step functions + dry-run input specs for every (arch × shape) cell.
+
+``train_step``     — loss + grads + AdamW update (used by train_4k cells)
+``prefill_step``   — full-sequence forward returning last-token logits
+``serve_step``     — one decode token against a KV/SSM cache (decode cells)
+``input_specs``    — ShapeDtypeStruct stand-ins for every model input of the
+                     cell's step function: weak-type-correct, shardable, and
+                     allocation-free (built via jax.eval_shape).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import lm
+from repro.training import optim
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------- #
+# loss / steps
+# --------------------------------------------------------------------------- #
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    logits = lm.forward(params, cfg, batch["tokens"], frames=batch.get("frames"))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: Optional[optim.AdamWConfig] = None):
+    opt_cfg = opt_cfg or optim.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, cfg, batch)
+        params, opt_state = optim.apply_updates(opt_cfg, params, grads, opt_state)
+        return loss, params, opt_state
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        logits = lm.forward(params, cfg, batch["tokens"], frames=batch.get("frames"))
+        return logits[:, -1, :]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, positions):
+        logits, cache = lm.decode_step(params, cfg, cache, tokens, positions)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def step_fn_for(cfg: ModelConfig, shape: ShapeSpec):
+    if shape.kind == "train":
+        return make_train_step(cfg)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg)
+    return make_serve_step(cfg)
+
+
+# --------------------------------------------------------------------------- #
+# dry-run input specs (no allocation anywhere)
+# --------------------------------------------------------------------------- #
+def _sds(tree):
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def param_specs(cfg: ModelConfig, dtype=None) -> Params:
+    sds = jax.eval_shape(functools.partial(lm.init_params, cfg),
+                         jax.random.PRNGKey(0))
+    if dtype is not None:
+        sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), sds)
+    return sds
+
+
+def opt_state_specs(cfg: ModelConfig) -> Params:
+    return jax.eval_shape(optim.init_state, param_specs(cfg))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    b: Dict[str, Any] = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.kind == "train":
+        b["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.is_encoder_decoder:
+        b["frames"] = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model),
+                                           jnp.bfloat16)
+    return b
+
+
+def cache_specs(cfg: ModelConfig, B: int, seq_len: int) -> Params:
+    return jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Every input of the cell's step function, as ShapeDtypeStructs.
+
+    train   -> (params, opt_state, batch)
+    prefill -> (params, batch)
+    decode  -> (params, cache, tokens, positions)
+    """
+    if shape.kind == "train":
+        return {"params": param_specs(cfg),
+                "opt_state": opt_state_specs(cfg),
+                "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": param_specs(cfg, dtype=jnp.bfloat16),
+                "batch": batch_specs(cfg, shape)}
+    B = shape.global_batch
+    return {"params": param_specs(cfg, dtype=jnp.bfloat16),
+            "cache": cache_specs(cfg, B, shape.seq_len),
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((B,), jnp.int32)}

@@ -1,0 +1,2 @@
+"""Real-JAX serving data plane: continuous batching over the model zoo."""
+from repro.serving.engine import Engine, Request, RequestState  # noqa: F401

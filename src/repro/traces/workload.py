@@ -1,0 +1,270 @@
+"""Runtime-trace construction — every table in Appendix H, verbatim.
+
+A Trace is a sequence of TimestampObservation (the data plane's monitoring
+points): per-model workloads + cluster availability.  These drive both the
+motivation studies (§3), the case studies (§8) and the end-to-end benchmark
+(§7.1 phase profiles).
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.plan import ClusterState, ModelSpec, QWEN25_FAMILY, Workload
+
+
+@dataclass(frozen=True)
+class TimestampObservation:
+    idx: int
+    time: float
+    workloads: Tuple[Workload, ...]
+    cluster: ClusterState
+
+
+@dataclass(frozen=True)
+class Trace:
+    name: str
+    observations: Tuple[TimestampObservation, ...]
+    models: Tuple[str, ...]
+
+    def __len__(self) -> int:
+        return len(self.observations)
+
+    def window(self, start: int, end: int) -> "Trace":
+        obs = self.observations[start:end]
+        return Trace(f"{self.name}[{start}:{end}]", obs, self.models)
+
+
+_M = {s: QWEN25_FAMILY[s].name for s in QWEN25_FAMILY}
+
+# phase profiles (App. H.1): batch / prefill / decode per model size
+_HEAVY = {
+    "1.5B": (64, 256, 2048), "3B": (64, 256, 1536), "7B": (64, 256, 3072),
+    "14B": (384, 512, 8192), "32B": (256, 512, 6144), "72B": (128, 512, 5120),
+}
+_LIGHT = {
+    "1.5B": (960, 256, 4096), "3B": (480, 256, 3072), "7B": (288, 256, 6144),
+    "14B": (64, 256, 2048), "32B": (32, 256, 1536), "72B": (16, 256, 1280),
+}
+
+
+def _phase_workloads(phase: str, sizes: Sequence[str],
+                     overrides: Optional[Dict[str, Tuple[int, int, int]]] = None
+                     ) -> Tuple[Workload, ...]:
+    base = _HEAVY if phase == "H" else _LIGHT
+    out = []
+    for s in sizes:
+        b, p, d = (overrides or {}).get(s, base[s])
+        out.append(Workload(_M[s], b, p, d))
+    return tuple(out)
+
+
+def _mk(name: str, rows: List[Tuple[Tuple[Workload, ...], ClusterState]],
+        models: Sequence[str], dt: float = 1.0) -> Trace:
+    obs = tuple(TimestampObservation(i, i * dt, w, c)
+                for i, (w, c) in enumerate(rows))
+    return Trace(name, obs, tuple(_M[s] for s in models))
+
+
+def _homog_cluster(n: int = 32, gpu: str = "H100-80G") -> ClusterState:
+    return ClusterState(((gpu, n),))
+
+
+def _hetero_cluster() -> ClusterState:
+    """§7 heterogeneous environment: 64 GPUs across four types."""
+    return ClusterState((("A100-40G", 20), ("A100-80G", 20),
+                         ("H100-80G", 8), ("H20-96G", 16)))
+
+
+# --------------------------------------------------------------------------- #
+# Motivation traces (Tables 8, 9)
+# --------------------------------------------------------------------------- #
+SIZES6 = ("1.5B", "3B", "7B", "14B", "32B", "72B")
+
+
+def motivation_trace_left(cluster: Optional[ClusterState] = None) -> Trace:
+    c = cluster or _homog_cluster()
+    rows = [(_phase_workloads(p, SIZES6), c) for p in ("H", "L", "H")]
+    return _mk("motivation-left", rows, SIZES6)
+
+
+def motivation_trace_right(cluster: Optional[ClusterState] = None) -> Trace:
+    c = cluster or _homog_cluster()
+    ts1 = {"1.5B": (968, 256, 4096), "3B": (476, 256, 3072)}
+    ts3 = {"1.5B": (72, 256, 2048), "14B": (400, 512, 8192)}
+    rows = [
+        (_phase_workloads("L", SIZES6), c),
+        (_phase_workloads("L", SIZES6, ts1), c),
+        (_phase_workloads("H", SIZES6), c),
+        (_phase_workloads("H", SIZES6, ts3), c),
+        (_phase_workloads("H", SIZES6), c),
+    ]
+    return _mk("motivation-right", rows, SIZES6)
+
+
+# --------------------------------------------------------------------------- #
+# §8.1 workload-fluctuation traces (Tables 10, 11)
+# --------------------------------------------------------------------------- #
+def stable_workload_trace(cluster: Optional[ClusterState] = None) -> Trace:
+    """Table 10: three small models, mostly stable with slight variations.
+    §8.1 runs on the Swiss-AI-style heterogeneous cluster."""
+    c = cluster or _hetero_cluster()
+    b15 = [960, 1008, 952, 960, 968, 956, 962, 958, 1008, 964]
+    b3 = [480, 476, 480, 480, 544, 480, 480, 478, 481, 480]
+    b7 = [288, 284, 264, 290, 286, 288, 336, 287, 285, 291]
+    rows = []
+    for i in range(10):
+        d15 = 8192 if i == 3 else 4096
+        p7 = 512 if i == 6 else 256
+        w = (Workload(_M["1.5B"], b15[i], 256, d15),
+             Workload(_M["3B"], b3[i], 256, 3072),
+             Workload(_M["7B"], b7[i], p7, 6144))
+        rows.append((w, c))
+    return _mk("stable-workload", rows, ("1.5B", "3B", "7B"))
+
+
+def volatile_workload_trace(cluster: Optional[ClusterState] = None) -> Trace:
+    """Table 11: H/H/H/L/L/L/H/H/H/L with per-ts batch tweaks (§8.1 hetero)."""
+    c = cluster or _hetero_cluster()
+    phases = ["H", "H", "H", "L", "L", "L", "H", "H", "H", "L"]
+    tweaks: Dict[int, Dict[str, Tuple[int, int, int]]] = {
+        1: {"1.5B": (80, 256, 2048), "14B": (400, 512, 8192)},
+        4: {"1.5B": (1008, 256, 4096), "7B": (336, 256, 6144)},
+        6: {"1.5B": (96, 256, 2048), "14B": (416, 512, 8192)},
+        8: {"1.5B": (80, 256, 2048), "14B": (400, 512, 8192)},
+    }
+    rows = [(_phase_workloads(p, SIZES6, tweaks.get(i)), c)
+            for i, p in enumerate(phases)]
+    return _mk("volatile-workload", rows, SIZES6)
+
+
+# --------------------------------------------------------------------------- #
+# §8.2 elastic cluster traces (Tables 12, 13)
+# --------------------------------------------------------------------------- #
+_ELASTIC_WORKLOAD = (
+    Workload(_M["7B"], 128, 512, 512),
+    Workload(_M["14B"], 192, 512, 2048),
+    Workload(_M["72B"], 256, 512, 4096),
+)
+
+
+def elastic_cluster_traces() -> Dict[str, Trace]:
+    def c(a100: int, h100: int, h200: int) -> ClusterState:
+        gpus = []
+        if a100:
+            gpus.append(("A100-80G", a100))
+        if h100:
+            gpus.append(("H100-SXM", h100))
+        if h200:
+            gpus.append(("H200-SXM", h200))
+        return ClusterState(tuple(gpus))
+
+    stable = [c(0, 16, 16), c(0, 16, 24), c(0, 24, 24), c(16, 16, 8), c(8, 24, 16)]
+    volatile = [c(8, 16, 16), c(0, 8, 24), c(16, 24, 8), c(16, 40, 8), c(8, 24, 16)]
+    out = {}
+    for name, clusters in (("elastic-stable", stable), ("elastic-volatile", volatile)):
+        rows = [(_ELASTIC_WORKLOAD, cl) for cl in clusters]
+        out[name] = _mk(name, rows, ("7B", "14B", "72B"))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# §7.1 phase-profile traces (Table 14) — DistServe / HexGen comparisons
+# --------------------------------------------------------------------------- #
+_SHAREGPT_PHASES = [
+    ("prefill-heavy", 1232, 14), ("decode-heavy", 535, 545),
+    ("balanced-short", 549, 18), ("stable-mixed", 1094, 290),
+    ("stable-mixed", 1101, 292), ("stable-mixed", 1097, 289),
+]
+_LONGBENCH_PHASES = [
+    ("prefill-heavy", 2035, 5), ("prefill-heavy", 2037, 3),
+    ("decode-heavy", 1597, 373), ("stable-decode-heavy", 1605, 373),
+    ("stable-decode-heavy", 1554, 397), ("stable-decode-heavy", 1582, 387),
+]
+
+
+def sharegpt_longbench_traces(model: str = "qwen2.5-72b",
+                              requests_per_phase: Tuple[int, int] = (5120, 1728),
+                              cluster: Optional[ClusterState] = None
+                              ) -> Dict[str, Trace]:
+    c = cluster or _homog_cluster(32)
+    out = {}
+    for name, phases, n_req in (("sharegpt", _SHAREGPT_PHASES, requests_per_phase[0]),
+                                ("longbench", _LONGBENCH_PHASES, requests_per_phase[1])):
+        rows = []
+        for _, pref, dec in phases:
+            rows.append(((Workload(model, max(n_req // 40, 16), pref, max(dec, 4)),), c))
+        t = _mk(name, rows, ())
+        out[name] = Trace(name, t.observations, (model,))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# SpotServe-style MAF traces (Tables 15, 16)
+# --------------------------------------------------------------------------- #
+_MAF_CLUSTER_SIZES = [24, 25, 26, 27, 29, 30, 32, 33, 36, 38, 42, 45,
+                      48, 51, 54, 55, 60, 63, 62, 64, 61, 62, 60, 57,
+                      56, 54, 55, 53, 51, 50, 49, 47, 45, 44, 43]
+
+_MAF1 = [("decode-heavy", 512, 1024), ("mixed", 2048, 256),
+         ("prefill-heavy", 4096, 128), ("mixed-stable", 2048, 256)]
+_MAF2 = [("prefill-heavy", 4096, 128), ("mixed", 2048, 256),
+         ("decode-heavy", 512, 1024), ("mixed-stable", 2048, 256)]
+
+
+def maf_traces(model: str = "qwen2.5-72b", batch: int = 64) -> Dict[str, Trace]:
+    out = {}
+    for name, phases in (("maf-1", _MAF1), ("maf-2", _MAF2)):
+        rows = []
+        n = len(_MAF_CLUSTER_SIZES)
+        per_phase = n // len(phases)
+        for i, size in enumerate(_MAF_CLUSTER_SIZES):
+            ph = phases[min(i // per_phase, len(phases) - 1)]
+            _, pref, dec = ph
+            rows.append(((Workload(model, batch, pref, dec),),
+                         ClusterState((("A100-80G", size),))))
+        out[name] = _mk(name, rows, ())
+        out[name] = Trace(name, out[name].observations, (model,))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# §8.3 agentic workflow traces (ShareGPT-style, online call revelation)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class AgenticCall:
+    workflow: int
+    call_idx: int
+    prefill_len: int
+    decode_len: int
+
+
+@dataclass(frozen=True)
+class AgenticTrace:
+    name: str
+    workflows: Tuple[Tuple[AgenticCall, ...], ...]   # per-workflow call chains
+    slo_scale: float = 3.0
+
+    @property
+    def n_calls(self) -> int:
+        return sum(len(w) for w in self.workflows)
+
+
+def agentic_traces(n_workflows: int = 64, seed: int = 0
+                   ) -> Dict[str, AgenticTrace]:
+    """Two non-overlapping 64-workflow slices with ShareGPT-like length mix."""
+    out = {}
+    for t_idx, name in enumerate(("agentic-1", "agentic-2")):
+        rng = random.Random(seed + 1000 * t_idx)
+        wfs = []
+        for w in range(n_workflows):
+            n_calls = rng.choice([2, 3, 3, 4, 5])
+            calls = []
+            for ci in range(n_calls):
+                pref = int(rng.lognormvariate(5.8, 0.8)) + 32      # ~ShareGPT mix
+                dec = int(rng.lognormvariate(4.6, 1.0)) + 8
+                calls.append(AgenticCall(w, ci, min(pref, 4096), min(dec, 2048)))
+            wfs.append(tuple(calls))
+        out[name] = AgenticTrace(name, tuple(wfs))
+    return out

@@ -1,0 +1,131 @@
+"""Fault-tolerant checkpointing: atomic, sharded, optionally asynchronous.
+
+Layout:  <dir>/step_<N>/
+            manifest.json     — step, flat-key list, shapes/dtypes
+            <idx>.npy         — one file per pytree leaf (host-local shard)
+         <dir>/LATEST         — atomic pointer (write-temp + rename)
+
+Writes go to ``step_<N>.tmp`` and are renamed only after fsync — a crash
+mid-write never corrupts the restore point.  ``AsyncCheckpointer`` moves
+serialization off the training thread (device→host copy happens sync, disk
+I/O async) — the standard large-scale pattern.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any,
+         extra: Optional[Dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step}"
+    tmp = ckpt_dir / f"step_{step}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "n_leaves": len(leaves),
+                "treedef": str(treedef), "extra": extra or {}}
+    for i, leaf in enumerate(leaves):
+        np.save(tmp / f"{i}.npy", np.asarray(leaf))
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # fsync directory entries then atomic rename
+    fd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    latest_tmp = ckpt_dir / "LATEST.tmp"
+    latest_tmp.write_text(str(step))
+    latest_tmp.rename(ckpt_dir / "LATEST")
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    p = Path(ckpt_dir) / "LATEST"
+    if not p.exists():
+        return None
+    try:
+        step = int(p.read_text().strip())
+    except ValueError:
+        return None
+    return step if (Path(ckpt_dir) / f"step_{step}").exists() else None
+
+
+def restore(ckpt_dir: str | Path, tree_like: Any,
+            step: Optional[int] = None) -> Tuple[Any, int, Dict]:
+    """Restore into the structure of ``tree_like`` (shape/dtype validated)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves, treedef = _flatten(tree_like)
+    if manifest["n_leaves"] != len(leaves):
+        raise ValueError(f"leaf count mismatch: ckpt {manifest['n_leaves']} "
+                         f"vs target {len(leaves)}")
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(d / f"{i}.npy")
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {ref.shape}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return treedef.unflatten(new_leaves), step, manifest.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Serialize to host sync, write to disk on a background thread."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()                               # one in-flight write at a time
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.ckpt_dir.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.ckpt_dir / f"step_{s}", ignore_errors=True)

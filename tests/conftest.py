@@ -1,0 +1,26 @@
+import os
+import sys
+from pathlib import Path
+
+# make src importable regardless of how pytest is invoked
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def sim_env():
+    from repro.core.plan import HARDWARE, QWEN25_FAMILY
+    from repro.core.simulator import Simulator
+    models = {m.name: m for m in QWEN25_FAMILY.values()}
+    return Simulator(models, HARDWARE), models, HARDWARE
+
+
+@pytest.fixture(scope="session")
+def evaluator(sim_env):
+    from repro.core.evaluator import Evaluator
+    sim, models, hw = sim_env
+    return Evaluator(sim, models, hw, candidate_timeout_s=30.0)

@@ -1,0 +1,38 @@
+"""Agentic request scheduling (§8.3): replay invariants + evolution."""
+import pytest
+
+from repro.core.agentic import (AGENTIC_DEFAULT_GENOME, AgenticPolicy,
+                                evolve_agentic, make_pool, replay)
+from repro.traces import agentic_traces
+
+TRACES = agentic_traces()
+
+
+def test_replay_conserves_calls():
+    tr = TRACES["agentic-1"]
+    pol = AgenticPolicy(dict(AGENTIC_DEFAULT_GENOME))
+    r = replay(pol, tr, make_pool())
+    assert r.valid
+    assert r.rounds == max(len(w) for w in tr.workflows)
+    assert r.fitness == pytest.approx(r.sum_sched + r.sum_serve)  # Eq. 15
+
+
+def test_sjf_no_worse_than_fifo_on_makespan_heavy_trace():
+    tr = TRACES["agentic-1"]
+    fifo = replay(AgenticPolicy(dict(AGENTIC_DEFAULT_GENOME, assign="rr")),
+                  tr, make_pool())
+    ef = replay(AgenticPolicy(dict(AGENTIC_DEFAULT_GENOME, order="sjf",
+                                   assign="earliest_finish")),
+                tr, make_pool())
+    assert ef.sum_serve <= fifo.sum_serve * 1.05
+
+
+def test_evolved_beats_greedy_and_milp():
+    tr = TRACES["agentic-2"]
+    pool = make_pool()
+    greedy = replay(AgenticPolicy(dict(AGENTIC_DEFAULT_GENOME)), tr, pool)
+    milp = replay(AgenticPolicy(dict(AGENTIC_DEFAULT_GENOME, use_bnb=True,
+                                     bnb_deadline=0.5)), tr, pool)
+    _, best, hist = evolve_agentic(tr, iters=20, seed=0, pool=pool)
+    assert best.fitness <= min(greedy.fitness, milp.fitness) + 1e-9
+    assert hist == sorted(hist, reverse=True)  # monotone improvement

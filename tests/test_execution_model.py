@@ -1,0 +1,63 @@
+"""Eq. 13 interval accounting properties."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.execution_model import ExecutionAccumulator
+from repro.core.plan import (HARDWARE, QWEN25_FAMILY, Plan, ReplicaGroup,
+                             Workload)
+from repro.core.simulator import Simulator
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+W = [Workload("qwen2.5-7b", 64, 256, 512)]
+P1 = Plan((ReplicaGroup("qwen2.5-7b", "H100-80G", 2, 64, 1),))
+P2 = Plan((ReplicaGroup("qwen2.5-7b", "A100-80G", 4, 32, 2),))
+
+
+def test_cold_start_accounting():
+    acc = ExecutionAccumulator(SIM)
+    rec = acc.interval(0, None, P1, W, t_sched=3.0, rescheduled=True)
+    assert rec.t_stale == 3.0                 # nothing serves during cold start
+    assert rec.t_reconfig == 0.0
+    assert rec.t_serve == pytest.approx(SIM.serve_cost(P1, W))
+    assert acc.T_total == pytest.approx(rec.t_stale + rec.t_serve)
+
+
+def test_non_rescheduled_interval_has_no_overhead():
+    acc = ExecutionAccumulator(SIM)
+    acc.interval(0, None, P1, W, 1.0, True)
+    rec = acc.interval(1, P1, P1, W, 0.0, rescheduled=False)
+    assert rec.t_sched == rec.t_stale == rec.t_reconfig == 0.0
+    assert rec.t_serve > 0
+
+
+def test_reschedule_to_same_plan_zero_reconfig():
+    acc = ExecutionAccumulator(SIM)
+    acc.interval(0, None, P1, W, 1.0, True)
+    rec = acc.interval(1, P1, P1, W, t_sched=0.5, rescheduled=True)
+    assert rec.t_reconfig == 0.0
+    assert rec.t_stale == 0.5
+
+
+def test_work_crediting_bounds():
+    """Serving during phases 1–2 reduces phase 3 but never below zero."""
+    acc = ExecutionAccumulator(SIM)
+    acc.interval(0, None, P1, W, 1.0, True)
+    serve_new = SIM.serve_cost(P2, W)
+    rec = acc.interval(1, P1, P2, W, t_sched=2.0, rescheduled=True)
+    assert 0.0 <= rec.t_serve <= serve_new
+    assert rec.t_reconfig == pytest.approx(SIM.reconfig_cost(P1, P2))
+
+
+@given(st.floats(0.0, 50.0))
+@settings(max_examples=20, deadline=None)
+def test_eq13_additivity(t_sched):
+    """T_total always equals the sum of its recorded components."""
+    acc = ExecutionAccumulator(SIM)
+    acc.interval(0, None, P1, W, t_sched, True)
+    acc.interval(1, P1, P2, W, t_sched, True)
+    acc.interval(2, P2, P2, W, 0.0, False)
+    assert acc.T_total == pytest.approx(
+        acc.sum_stale + acc.sum_reconfig + acc.sum_serve)
+    assert acc.N == 2

@@ -1,0 +1,65 @@
+"""While-aware HLO analysis: trip-count scaling, dot FLOPs, collective bytes."""
+import textwrap
+
+from repro.distributed.hlo_analysis import (RooflineTerms, analyze_hlo,
+                                            parse_computations)
+
+CANNED = textwrap.dedent("""\
+    HloModule jit_f
+
+    %body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %p0 = s32[] parameter(0)
+      %w = f32[16,16]{1,0} parameter(1)
+      %ag = f32[16,16]{1,0} all-gather(%w), channel_id=1, dimensions={1}
+      %d = f32[8,16]{1,0} dot(%x, %ag), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %x = f32[8,16]{1,0} parameter(2)
+    }
+
+    %cond (p: s32[]) -> pred[] {
+      %i = s32[] parameter(0)
+      %c = s32[] constant(5)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+      %a = f32[8,16]{1,0} parameter(0)
+      %wh = (s32[], f32[8,16]) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+      %ar = f32[8,16]{1,0} all-reduce(%a), channel_id=2, to_apply=%add
+      ROOT %r = f32[8,16]{1,0} get-tuple-element(%wh), index=1
+    }
+    """)
+
+
+def test_while_trip_count_scales_body():
+    ana = analyze_hlo(CANNED)
+    # dot inside 5-trip body: 2*8*16*16 each
+    assert ana.flops == 5 * 2 * 8 * 16 * 16
+    # all-gather in body counted ×5, all-reduce in entry ×1
+    assert ana.collective_by_kind["all-gather"] == 5 * 16 * 16 * 4
+    assert ana.collective_by_kind["all-reduce"] == 8 * 16 * 4
+    assert ana.collective_count["all-gather"] == 5
+
+
+def test_parse_computations_structure():
+    comps = parse_computations(CANNED)
+    assert set(comps) == {"body", "cond", "main"}
+    assert any(op.kind == "dot" for op in comps["body"].ops)
+
+
+def test_roofline_terms_dominance():
+    t = RooflineTerms(hlo_flops=197e12, hlo_bytes=819e9 * 3,
+                      collective_bytes=50e9, n_chips=256,
+                      model_flops=197e12 * 0.5 * 256)
+    assert t.compute_s == 1.0
+    assert t.memory_s == 3.0
+    assert t.collective_s == 1.0
+    assert t.dominant == "memory"
+    assert abs(t.roofline_fraction - 0.5 / 3.0) < 1e-9
+
+
+def test_roofline_fraction_never_exceeds_useful_ratio_bound():
+    t = RooflineTerms(hlo_flops=2e12, hlo_bytes=1e9, collective_bytes=0,
+                      n_chips=1, model_flops=1e12)
+    # fraction = ideal/bound <= 1 whenever model_flops <= hlo_flops
+    assert t.roofline_fraction <= 1.0 + 1e-9
+    assert 0.0 < t.useful_flops_ratio <= 1.0

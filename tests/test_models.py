@@ -1,0 +1,132 @@
+"""Model correctness: decode-vs-forward consistency, layer properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import lm
+from repro.models.layers import apply_rope, rmsnorm
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_decode_matches_forward_fp32(arch):
+    """Step-by-step decoding must reproduce the full forward logits."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = lm.init_params(cfg, KEY)
+    S = 10
+    toks = jax.random.randint(KEY, (1, S), 0, cfg.vocab_size)
+    frames = (jnp.ones((1, cfg.n_frames, cfg.d_model), jnp.float32)
+              if cfg.is_encoder_decoder else None)
+    full = lm.forward(params, cfg, toks, frames=frames)
+    cache = lm.init_cache(cfg, 1, 32, dtype=jnp.float32)
+    if cfg.is_encoder_decoder:
+        # decode path needs precomputed cross-attn KV: fill from encoder
+        enc = frames + params["enc_pos"][None].astype(jnp.float32)
+        fpos = jnp.broadcast_to(jnp.arange(enc.shape[1], dtype=jnp.int32)[None],
+                                enc.shape[:2])
+        from repro.models.layers import attention_fwd, swiglu
+        h = enc
+        for i in range(cfg.n_encoder_layers):
+            lp = jax.tree.map(lambda t: t[i], params["enc_layers"])
+            hh = rmsnorm(h, lp["ln1"]["scale"], cfg.norm_eps)
+            o, _ = attention_fwd(lp["attn"], cfg, hh, fpos, None, causal=False)
+            h = h + o
+            hh = rmsnorm(h, lp["ln2"]["scale"], cfg.norm_eps)
+            h = h + swiglu(lp["ffn"], hh)
+        enc_out = rmsnorm(h, params["enc_norm"]["scale"], cfg.norm_eps)
+        xks, xvs = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda t: t[i], params["layers"])
+            B, F, _ = enc_out.shape
+            xks.append((enc_out @ lp["xattn"]["wk"]).reshape(
+                B, F, cfg.n_kv_heads, cfg.d_head))
+            xvs.append((enc_out @ lp["xattn"]["wv"]).reshape(
+                B, F, cfg.n_kv_heads, cfg.d_head))
+        cache["xk"] = jnp.stack(xks)
+        cache["xv"] = jnp.stack(xvs)
+    lg = None
+    for i in range(S):
+        lg, cache = lm.decode_step(params, cfg, cache, toks[:, i:i + 1],
+                                   jnp.array([i], jnp.int32))
+    np.testing.assert_allclose(lg[:, -1], full[:, -1], atol=1e-4, rtol=1e-4)
+
+
+def test_rope_rotation_preserves_norm():
+    x = jax.random.normal(KEY, (2, 8, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1),
+                               jnp.linalg.norm(y, axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    q = jax.random.normal(KEY, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(9), (1, 1, 1, 64))
+
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.full((1, 1), i), 1e4)
+        kj = apply_rope(k, jnp.full((1, 1), j), 1e4)
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(5, 3) - dot_at(10, 8)) < 1e-3
+    assert abs(dot_at(7, 0) - dot_at(17, 10)) < 1e-3
+
+
+def test_rmsnorm_scale_invariance():
+    x = jax.random.normal(KEY, (4, 64))
+    s = jnp.zeros((64,))
+    y1 = rmsnorm(x, s)
+    y2 = rmsnorm(x * 1000.0, s)
+    np.testing.assert_allclose(y1, y2, atol=1e-4)
+
+
+def test_moe_dispatch_matches_dense_mix():
+    """Capacity dispatch (no drops) == dense-mix MoE output."""
+    from repro.models.layers import init_moe, moe_dense_mix, moe_dispatch
+    cfg = get_config("mixtral-8x7b").reduced()
+    p = init_moe(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, cfg.d_model)) * 0.5
+    dense = moe_dense_mix(p, cfg, x)
+    disp = moe_dispatch(p, cfg, x, capacity_factor=4.0)   # ample capacity
+    np.testing.assert_allclose(dense, disp, atol=1e-4, rtol=1e-3)
+
+
+def test_sliding_window_masks_long_range():
+    """Tokens beyond the window cannot influence the output."""
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              dtype="float32")
+    params = lm.init_params(cfg, KEY)
+    S = 40
+    assert cfg.sliding_window < S
+    t1 = jax.random.randint(KEY, (1, S), 0, cfg.vocab_size)
+    t2 = t1.at[:, 0].set((t1[:, 0] + 1) % cfg.vocab_size)  # perturb far past
+    l1 = lm.forward(params, cfg, t1)
+    l2 = lm.forward(params, cfg, t2)
+    # with window=16 and one layer-hop per layer, n_layers×window ≥ S would
+    # leak; reduced config: 4 layers × 16 = 64 > 40 — so compare only the
+    # DIRECT mask effect via a 1-layer model
+    cfg1 = dataclasses.replace(cfg, n_layers=1)
+    p1 = lm.init_params(cfg1, KEY)
+    a = lm.forward(p1, cfg1, t1)[:, -1]
+    b = lm.forward(p1, cfg1, t2)[:, -1]
+    np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_cache_mask_update_protects_inactive_slots():
+    cfg = get_config("mamba2-1.3b").reduced()
+    params = lm.init_params(cfg, KEY)
+    cache = lm.init_cache(cfg, 2, 16)
+    tok = jnp.array([[3], [5]], jnp.int32)
+    pos = jnp.zeros((2,), jnp.int32)
+    _, c2 = lm.decode_step(params, cfg, cache, tok, pos)
+    masked = lm.mask_cache_update(cfg, cache, c2,
+                                  jnp.array([True, False]))
+    # slot 1 state unchanged, slot 0 updated
+    assert float(jnp.abs(masked["ssm"][:, 1] - cache["ssm"][:, 1]).max()) == 0.0
+    assert float(jnp.abs(masked["ssm"][:, 0] - cache["ssm"][:, 0]).max()) > 0.0

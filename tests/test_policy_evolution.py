@@ -1,0 +1,137 @@
+"""Policy representation, mutation, evolution, timeouts."""
+import random
+
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.evaluator import Evaluator
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.core.mutation import StructuredMutator, mutation_prompt
+from repro.core.plan import HARDWARE, QWEN25_FAMILY
+from repro.core.policy import (DEFAULT_GENOME, Policy, parse_genome,
+                               render_policy, seed_policies)
+from repro.core.simulator import Simulator
+from repro.core.timeouts import CandidateTimeout, run_with_deadline
+from repro.traces import stable_workload_trace, volatile_workload_trace
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+EV = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=30.0)
+
+
+def test_render_parse_roundtrip():
+    g = dict(DEFAULT_GENOME, scheduler="bnb", time_budget=7.5)
+    pol = render_policy(g)
+    assert parse_genome(pol.source) == pol.genome
+    pol.compile()
+    assert callable(pol.fns[0]) and callable(pol.fns[1])
+
+
+def test_sandbox_blocks_imports():
+    bad = "import os\ndef should_reschedule(ctx): return True\n" \
+          "def schedule(ctx): return None\n"
+    with pytest.raises(Exception):
+        Policy(source=bad).compile()
+
+
+def test_policy_missing_fns_rejected():
+    with pytest.raises(ValueError):
+        Policy(source="x = 1\n").compile()
+
+
+genomes = st.fixed_dictionaries({
+    "scheduler": st.sampled_from(["greedy", "bnb", "hybrid"]),
+    "time_budget": st.floats(0.25, 5.0),
+    "batch_scheme": st.sampled_from(["pow2", "sweet"]),
+    "trigger_kind": st.sampled_from(["always", "threshold", "periodic",
+                                     "hybrid"]),
+    "shift_threshold": st.floats(0.05, 2.0),
+    "reconfig_penalty": st.floats(0.0, 4.0),
+    "migration_keep_threshold": st.floats(0.0, 2.0),
+})
+
+
+@given(genomes, st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_mutated_policies_always_compile(genome, seed):
+    rng = random.Random(seed)
+    parent = render_policy(genome)
+    fb = {"N": 3, "sum_sched": 1.0, "sum_stale": 5.0, "sum_reconfig": 10.0,
+          "sum_serve": 100.0, "T_total": 116.0}
+    child = StructuredMutator().mutate(parent, fb, [], {}, rng)
+    child.compile()
+    assert child.genome is not None
+    # every genome value stays in its legal domain
+    assert child.genome["scheduler"] in ("greedy", "bnb", "hybrid")
+    assert 0.25 <= child.genome["time_budget"] <= 60.0
+
+
+def test_directed_mutation_reduces_dominant_term_knob():
+    """Reconfig-dominant feedback must bias toward damping reconfiguration."""
+    rng = random.Random(1)
+    parent = render_policy({})
+    fb = {"N": 9, "sum_sched": 0.1, "sum_stale": 0.1, "sum_reconfig": 500.0,
+          "sum_serve": 10.0, "T_total": 510.2}
+    mut = StructuredMutator(explore_prob=0.0)
+    moved = 0
+    for s in range(24):
+        child = mut.mutate(parent, fb, [], {}, random.Random(s))
+        g = child.genome
+        if (g["reconfig_penalty"] > DEFAULT_GENOME["reconfig_penalty"]
+                or g["migration_keep_threshold"] > DEFAULT_GENOME["migration_keep_threshold"]
+                or g["shift_threshold"] > DEFAULT_GENOME["shift_threshold"]
+                or g["trigger_kind"] == "hybrid"):
+            moved += 1
+    assert moved >= 20      # crossover noise aside, moves are damping moves
+
+
+def test_candidate_timeout():
+    def slow():
+        import time
+        time.sleep(3.0)
+
+    with pytest.raises(CandidateTimeout):
+        run_with_deadline(slow, 0.2)
+
+
+def test_timeout_returns_result_and_walltime():
+    res, dt = run_with_deadline(lambda: 42, 5.0)
+    assert res == 42 and dt >= 0.0
+
+
+def test_evaluator_rejects_broken_policy():
+    bad = Policy(source="def should_reschedule(ctx): return True\n"
+                        "def schedule(ctx): raise ValueError('boom')\n")
+    r = EV.evaluate(bad, stable_workload_trace())
+    assert not r.valid and "schedule" in r.error
+
+
+def test_evolution_beats_seed_baselines():
+    tr = volatile_workload_trace()
+    seeds = {n: EV.evaluate(p, tr).fitness for n, p in seed_policies().items()}
+    evo = Evolution(EV, EvolutionConfig(max_iterations=25, patience=25,
+                                        evolution_timeout_s=120, seed=3))
+    state = evo.run(tr)
+    assert state.best is not None
+    assert state.best.fitness <= min(seeds.values()) + 1e-6
+    # convergence history is monotonically non-increasing
+    hist = [f for _, f in state.history]
+    assert all(b <= a + 1e-9 for a, b in zip(hist, hist[1:]))
+
+
+def test_warm_start_initializes_from_elites():
+    tr = stable_workload_trace()
+    cfg = EvolutionConfig(max_iterations=10, patience=10,
+                          evolution_timeout_s=60, seed=5)
+    evo = Evolution(EV, cfg)
+    s1 = evo.run(tr)
+    s2 = evo.run(tr, warm_start=s1)
+    assert s2.best.fitness <= s1.best.fitness + 1e-6
+
+
+def test_mutation_prompt_contains_tradeoffs():
+    p = mutation_prompt("SRC", {"T_total": 1.0}, [], {"best_fitness": 1.0})
+    for key in ("t_stale", "t_reconfig", "rescheduling frequency",
+                "thoroughness", "SRC"):
+        assert key in p

@@ -1,0 +1,74 @@
+"""Two-plane runtime: hot-swap, snapshotting, end-to-end self-evolution."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.evaluator import Evaluator
+from repro.core.evolution import EvolutionConfig
+from repro.core.plan import HARDWARE, QWEN25_FAMILY
+from repro.core.policy import render_policy, seed_policies
+from repro.core.runtime import (Autopoiesis, DataPlane, PolicyStage,
+                                SnapshotBuffer)
+from repro.core.simulator import Simulator
+from repro.traces import volatile_workload_trace
+from repro.traces.workload import TimestampObservation
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+EV = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0)
+
+
+def test_hot_swap_applies_staged_policy():
+    stage = PolicyStage()
+    buf = SnapshotBuffer()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage, buf)
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    assert dp.swap_count == 0
+    stage.publish(render_policy({"scheduler": "hybrid"}, name="new"))
+    dp.step(tr.observations[1])
+    assert dp.swap_count == 1
+    assert dp.policy.genome["scheduler"] == "hybrid"
+
+
+def test_bad_staged_code_never_disrupts_serving():
+    stage = PolicyStage()
+    buf = SnapshotBuffer()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage, buf)
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    from repro.core.policy import Policy
+    stage.publish(Policy(source="this is not python (", name="bad"))
+    out = dp.step(tr.observations[1])          # must not raise
+    assert dp.swap_count == 0
+    assert out["plan"] is not None
+
+
+def test_snapshot_window_and_overlap():
+    buf = SnapshotBuffer(capacity=8)
+    tr = volatile_workload_trace()
+    for obs in tr.observations:
+        buf.record(obs)
+    snap = buf.snapshot(window=4)
+    assert len(snap) == 4
+    # re-indexed from 0 and covering the most recent points
+    assert [o.idx for o in snap.observations] == [0, 1, 2, 3]
+    assert snap.observations[-1].time == tr.observations[-1].time
+    # consecutive snapshots may overlap
+    snap2 = buf.snapshot(window=6)
+    assert len(snap2) == 6
+
+
+def test_self_evolving_loop_improves_over_static():
+    tr = volatile_workload_trace()
+    # static greedy baseline
+    static = Autopoiesis(EV, seed_policies()["greedy-reactive"],
+                         EvolutionConfig(max_iterations=1), window=8)
+    acc_static = static.run_trace(tr, evolve=False)
+    # self-evolving
+    ap = Autopoiesis(EV, seed_policies()["greedy-reactive"],
+                     EvolutionConfig(max_iterations=12, patience=12,
+                                     evolution_timeout_s=60, seed=2),
+                     window=8, evolve_every=3)
+    acc = ap.run_trace(tr)
+    assert ap.control_plane.cycles >= 2
+    assert acc.T_total <= acc_static.T_total * 1.05

@@ -1,0 +1,128 @@
+"""Scheduler invariants: feasibility, coverage, quality ordering."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.plan import (HARDWARE, QWEN25_FAMILY, ClusterState, Ctx,
+                             Workload)
+from repro.core.schedulers import (agentic_bnb, agentic_greedy,
+                                   AgenticInstance, bnb_schedule,
+                                   greedy_schedule, minimal_migration)
+from repro.core.simulator import Simulator
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+
+
+def make_ctx(workloads, cluster, plan=None):
+    return Ctx(time=0.0, timestamp_idx=0, workloads=workloads, cluster=cluster,
+               current_plan=plan, models=MODELS, hardware=HARDWARE,
+               simulator=SIM)
+
+
+clusters = st.builds(
+    lambda h100, a100, h20: ClusterState(tuple(
+        (g, n) for g, n in [("H100-80G", h100), ("A100-80G", a100),
+                            ("H20-96G", h20)] if n > 0)),
+    st.integers(8, 32), st.integers(0, 32), st.integers(0, 16))
+
+workload_sets = st.lists(
+    st.builds(Workload,
+              model=st.sampled_from(["qwen2.5-1.5b", "qwen2.5-7b",
+                                     "qwen2.5-14b", "qwen2.5-72b"]),
+              batch=st.integers(4, 512),
+              prefill_len=st.sampled_from([128, 512]),
+              decode_len=st.sampled_from([128, 1024])),
+    min_size=1, max_size=4, unique_by=lambda w: w.model)
+
+
+@given(workload_sets, clusters)
+@settings(max_examples=25, deadline=None)
+def test_greedy_plans_feasible_and_cover(ws, cluster):
+    ctx = make_ctx(ws, cluster)
+    plan = greedy_schedule(ctx)
+    feas, why = SIM.plan_feasible(plan, cluster, ws)
+    assert feas, why
+    served = {g.model for g in plan.groups}
+    # every model with a feasible placement anywhere must be covered
+    for w in ws:
+        can_fit = any(SIM.fits(w.model, g, t, 1, w.prefill_len + w.decode_len)
+                      and cluster.count(g) >= t
+                      for g in cluster.types() for t in (1, 2, 4, 8))
+        if can_fit:
+            assert w.model in served, (w.model, plan)
+
+
+@given(workload_sets, clusters)
+@settings(max_examples=12, deadline=None)
+def test_bnb_no_worse_than_greedy(ws, cluster):
+    ctx = make_ctx(ws, cluster)
+    g = greedy_schedule(ctx, batch_scheme="pow2")
+    # same candidate space (pow2) → B&B's exhaustive search must dominate
+    b = bnb_schedule(ctx, deadline_s=5.0, batch_scheme="pow2")
+    sg = SIM.serve_cost(g, ws)
+    sb = SIM.serve_cost(b, ws)
+    if sg < 1e9 and sb < 1e9:
+        assert sb <= sg * 1.001
+
+
+def test_minimal_migration_keeps_plan_when_cluster_unchanged():
+    ws = [Workload("qwen2.5-7b", 64, 256, 512),
+          Workload("qwen2.5-14b", 64, 256, 512)]
+    cluster = ClusterState((("H100-80G", 16),))
+    ctx = make_ctx(ws, cluster)
+    p0 = greedy_schedule(ctx)
+    ctx2 = make_ctx(ws, cluster, plan=p0)
+    p1 = minimal_migration(ctx2)
+    assert SIM.reconfig_cost(p0, p1) == 0.0
+
+
+def test_minimal_migration_replaces_lost_devices():
+    ws = [Workload("qwen2.5-7b", 64, 256, 512)]
+    big = ClusterState((("H100-80G", 16),))
+    ctx = make_ctx(ws, big)
+    p0 = bnb_schedule(ctx, deadline_s=2.0)
+    small = ClusterState((("A100-80G", 8),))     # H100s all preempted
+    ctx2 = make_ctx(ws, small, plan=p0)
+    p1 = minimal_migration(ctx2)
+    feas, why = SIM.plan_feasible(p1, small, ws)
+    assert feas, why
+    assert {g.model for g in p1.groups} == {"qwen2.5-7b"}
+
+
+def test_agentic_bnb_no_worse_than_greedy():
+    import random
+
+    class C:
+        def __init__(self, w, i, p, d):
+            self.workflow, self.call_idx = w, i
+            self.prefill_len, self.decode_len = p, d
+
+    rng = random.Random(0)
+    calls = [C(i, 0, rng.randint(64, 512), rng.randint(16, 256))
+             for i in range(8)]
+    pis = [AgenticInstance(f"p{i}", "prefill", 1000.0) for i in range(2)]
+    dis = [AgenticInstance(f"d{i}", "decode", 400.0) for i in range(2)]
+
+    def makespan(assign, pis, dis):
+        pf = {p.name: 0.0 for p in pis}
+        df = {d.name: 0.0 for d in dis}
+        pm = {p.name: p for p in pis}
+        dm = {d.name: d for d in dis}
+        mk = 0.0
+        key = {(c.workflow, c.call_idx): c for c in calls}
+        for a in sorted(assign, key=lambda a: a.priority):
+            c = key[a.call_key]
+            tp = pf[a.prefill_inst] + c.prefill_len / pm[a.prefill_inst].speed_tok_s
+            pf[a.prefill_inst] = tp
+            td = max(tp, df[a.decode_inst]) + c.decode_len / dm[a.decode_inst].speed_tok_s
+            df[a.decode_inst] = td
+            mk = max(mk, td)
+        return mk
+
+    g = agentic_greedy(calls, [AgenticInstance(f"p{i}", "prefill", 1000.0) for i in range(2)],
+                       [AgenticInstance(f"d{i}", "decode", 400.0) for i in range(2)])
+    b = agentic_bnb(calls, pis, dis, deadline_s=2.0)
+    assert makespan(b, pis, dis) <= makespan(
+        g, [AgenticInstance(f"p{i}", "prefill", 1000.0) for i in range(2)],
+        [AgenticInstance(f"d{i}", "decode", 400.0) for i in range(2)]) * 1.001

@@ -1,0 +1,86 @@
+"""Sharding-rule unit tests (mesh-shape stubs; no 512-device init here)."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.distributed import sharding as sh
+
+
+class StubMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = StubMesh({"data": 16, "model": 16})
+POD = StubMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _pol(mesh=MESH, mode="tp"):
+    batch = ("pod", "data") if "pod" in mesh.shape else ("data",)
+    return sh.ShardingPolicy(mesh, mode=mode, batch_axes=batch)
+
+
+def test_sanitize_drops_nondivisible():
+    spec = sh._sanitize(MESH, (50280, 2048), ("model", "data"))
+    assert spec == P(None, "data")          # 50280 % 16 != 0
+    spec2 = sh._sanitize(MESH, (32768, 2048), ("model", "data"))
+    assert spec2 == P("model", "data")
+
+
+def test_batch_entry_fallback_chain():
+    pol = _pol(POD)
+    assert sh._batch_entry(pol, 256) == ("pod", "data")   # 256 % 32 == 0
+    assert sh._batch_entry(pol, 2) == "pod"               # only pod divides
+    assert sh._batch_entry(pol, 3) is None
+    fpol = sh.ShardingPolicy(POD, mode="fsdp", batch_axes=("pod", "data"))
+    assert sh._batch_entry(fpol, 512) == ("pod", "data", "model")
+
+
+def test_tp_mode_selection_per_arch():
+    assert sh._tp_compatible(get_config("mixtral-8x22b"), 16)   # 48 heads
+    assert sh._tp_compatible(get_config("qwen1.5-110b"), 16)    # 64 heads
+    assert not sh._tp_compatible(get_config("qwen2-1.5b"), 16)  # 12 heads
+    assert not sh._tp_compatible(get_config("minicpm3-4b"), 16)  # 40 heads
+    assert sh._tp_compatible(get_config("mamba2-1.3b"), 16)     # 64 ssd heads
+    assert sh._tp_compatible(get_config("zamba2-7b"), 16)       # 32 heads, 112 ssd
+
+
+def test_param_rule_shapes():
+    cfg = get_config("mixtral-8x7b")
+    pol = _pol()
+    # moe expert weights: (E, D, F) -> (None, fsdp, tp)
+    rule = sh._param_rule(cfg, pol, ("layers", "ffn", "w_gate"), (8, 4096, 14336))
+    assert rule == (None, "data", "model")
+    rule = sh._param_rule(cfg, pol, ("layers", "attn", "wq"), (4096, 4096))
+    assert rule == ("data", "model")
+    rule = sh._param_rule(cfg, pol, ("embed",), (32000, 4096))
+    assert rule == ("model", "data")
+
+
+def test_activation_flags_seq_sharding():
+    pol = _pol()
+    f = sh.activation_shard_flags(pol, B=256, S=4096)
+    assert f["batch"] == "data" and f["seq"] == "model"
+    f2 = sh.activation_shard_flags(pol, B=1, S=1)      # decode, b=1
+    assert f2["batch"] is None and f2["seq"] is None
+    fpol = sh.ShardingPolicy(MESH, mode="fsdp", batch_axes=("data",))
+    f3 = sh.activation_shard_flags(fpol, B=256, S=4096)
+    assert f3["batch"] == ("data", "model") and f3["seq"] is None
+
+
+def test_dryrun_artifacts_exist_for_all_cells():
+    """The committed dry-run artifacts must cover the full 40×2 matrix."""
+    import json
+    from pathlib import Path
+    art = Path(__file__).resolve().parents[1] / "benchmarks" / "artifacts" / "dryrun"
+    if not art.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    recs = [json.loads(p.read_text()) for p in art.glob("*.json")
+            if "__" in p.name and p.name.count("__") == 2]
+    cells = {(r["arch"], r["shape"], r["mesh"]) for r in recs}
+    assert len(cells) >= 80
+    bad = [r for r in recs if r.get("status") == "error"]
+    assert not bad, bad[:2]

@@ -1,0 +1,97 @@
+"""Simulator invariants — hypothesis property tests over Appendix B."""
+import hypothesis.strategies as st
+import pytest
+from hypothesis import given, settings
+
+from repro.core.plan import (HARDWARE, QWEN25_FAMILY, ClusterState, Plan,
+                             ReplicaGroup, Workload, spec_from_config)
+from repro.core.simulator import MEM_THETA, PENALTY, Simulator
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+
+model_names = st.sampled_from(sorted(MODELS))
+gpu_names = st.sampled_from(["H100-80G", "A100-80G", "H20-96G", "H200-SXM"])
+tps = st.sampled_from([1, 2, 4, 8])
+batches = st.integers(1, 256)
+pref = st.sampled_from([128, 256, 512, 2048])
+dec = st.sampled_from([16, 256, 1024, 4096])
+
+
+@given(model_names, gpu_names, tps, batches, pref, dec)
+@settings(max_examples=60, deadline=None)
+def test_latency_positive_and_monotone_in_decode(z, g, t, b, sp, sd):
+    l1 = SIM.group_latency(z, g, t, b, sp, sd)
+    l2 = SIM.group_latency(z, g, t, b, sp, sd * 2)
+    assert l1 > 0
+    if l1 < PENALTY and l2 < PENALTY:
+        assert l2 >= l1                      # more tokens never faster
+
+
+@given(model_names, tps, batches, pref, dec)
+@settings(max_examples=40, deadline=None)
+def test_faster_gpu_is_not_slower(z, t, b, sp, sd):
+    slow = SIM.group_latency(z, "A100-80G", t, b, sp, sd)
+    fast = SIM.group_latency(z, "H200-SXM", t, b, sp, sd)
+    if slow < PENALTY and fast < PENALTY:
+        assert fast <= slow * 1.01           # strictly better FLOPs+BW+mem
+
+
+@given(model_names, gpu_names, tps)
+@settings(max_examples=40, deadline=None)
+def test_memory_feasibility_monotone_in_tp(z, g, t):
+    """If weights fit at tp, they fit at 2·tp (weight shard halves)."""
+    if SIM.fits(z, g, t, 1, 128) and 2 * t <= 8:
+        assert SIM.fits(z, g, 2 * t, 1, 128)
+
+
+@given(model_names, gpu_names, tps, batches)
+@settings(max_examples=40, deadline=None)
+def test_reconfig_identity_is_zero(z, g, t, b):
+    p = Plan((ReplicaGroup(z, g, t, b, 1),))
+    assert SIM.reconfig_cost(p, p) == 0.0
+    assert SIM.reconfig_cost(None, p) == 0.0         # cold start
+
+
+@given(model_names, st.sampled_from(["H100-80G", "A100-80G"]),
+       st.sampled_from(["H200-SXM", "H20-96G"]))
+@settings(max_examples=30, deadline=None)
+def test_reconfig_symmetric_positive(z, g1, g2):
+    p1 = Plan((ReplicaGroup(z, g1, 8, 8, 1),))
+    p2 = Plan((ReplicaGroup(z, g2, 8, 8, 1),))
+    c = SIM.reconfig_cost(p1, p2)
+    assert c > 0
+    # term+load both bounded by the slowest transfer × 2
+    tmax = max(SIM.weight_transfer_time(z, g1), SIM.weight_transfer_time(z, g2))
+    assert c <= 2 * tmax + 1e-9
+
+
+def test_weight_bytes_matches_model_zoo_param_count():
+    """Eq. 2 (simulator) vs the real architecture configs (±12%)."""
+    from repro.configs import get_config
+    for arch in ("qwen2-1.5b", "qwen1.5-110b", "mixtral-8x7b", "gemma2-9b"):
+        cfg = get_config(arch)
+        spec = spec_from_config(cfg)
+        analytic = spec.weight_bytes / 2
+        real = cfg.param_count()
+        assert abs(analytic - real) / real < 0.12, (arch, analytic, real)
+
+
+def test_oom_penalty():
+    # 72B on a single 40GB GPU at tp=1 cannot fit
+    assert SIM.group_latency("qwen2.5-72b", "A100-40G", 1, 1, 128, 16) >= PENALTY
+
+
+def test_serve_cost_uncovered_model_penalised():
+    plan = Plan((ReplicaGroup("qwen2.5-7b", "H100-80G", 1, 32, 1),))
+    w = [Workload("qwen2.5-7b", 32, 128, 128),
+         Workload("qwen2.5-14b", 32, 128, 128)]
+    assert SIM.serve_cost(plan, w) >= PENALTY
+
+
+def test_pcie_coeff_bounds():
+    from repro.core.simulator import _pcie_coeff
+    for wb in (1e8, 1e9, 1e10, 1e11, 3e11):
+        c = _pcie_coeff(wb)
+        assert 5.3 <= c <= 11.5
+    assert _pcie_coeff(1e9) > _pcie_coeff(1e11)   # small models pay more

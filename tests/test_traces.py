@@ -1,0 +1,80 @@
+"""Appendix-H trace tables — spot-check exact values."""
+from repro.core.plan import QWEN25_FAMILY
+from repro.traces import (agentic_traces, elastic_cluster_traces,
+                          motivation_trace_left, motivation_trace_right,
+                          stable_workload_trace, volatile_workload_trace)
+from repro.traces.workload import maf_traces, sharegpt_longbench_traces
+
+
+def _by_model(obs):
+    return {w.model: w for w in obs.workloads}
+
+
+def test_motivation_left_table8():
+    tr = motivation_trace_left()
+    assert len(tr) == 3
+    h = _by_model(tr.observations[0])
+    l = _by_model(tr.observations[1])
+    assert h["qwen2.5-14b"].batch == 384 and h["qwen2.5-72b"].batch == 128
+    assert l["qwen2.5-1.5b"].batch == 960 and l["qwen2.5-72b"].batch == 16
+    assert _by_model(tr.observations[2])["qwen2.5-14b"].batch == 384
+
+
+def test_motivation_right_table9():
+    tr = motivation_trace_right()
+    assert len(tr) == 5
+    assert _by_model(tr.observations[1])["qwen2.5-1.5b"].batch == 968
+    assert _by_model(tr.observations[3])["qwen2.5-14b"].batch == 400
+
+
+def test_stable_trace_table10():
+    tr = stable_workload_trace()
+    assert len(tr) == 10
+    b15 = [_by_model(o)["qwen2.5-1.5b"].batch for o in tr.observations]
+    assert b15 == [960, 1008, 952, 960, 968, 956, 962, 958, 1008, 964]
+    assert _by_model(tr.observations[3])["qwen2.5-1.5b"].decode_len == 8192
+    assert _by_model(tr.observations[6])["qwen2.5-7b"].prefill_len == 512
+    assert _by_model(tr.observations[2])["qwen2.5-7b"].batch == 264
+
+
+def test_volatile_trace_table11():
+    tr = volatile_workload_trace()
+    phases = [_by_model(o)["qwen2.5-1.5b"].batch for o in tr.observations]
+    assert phases == [64, 80, 64, 960, 1008, 960, 96, 64, 80, 960]
+
+
+def test_elastic_tables12_13():
+    trs = elastic_cluster_traces()
+    st = trs["elastic-stable"]
+    assert [o.cluster.total for o in st.observations] == [32, 40, 48, 40, 48]
+    vo = trs["elastic-volatile"]
+    assert [o.cluster.total for o in vo.observations] == [40, 32, 48, 64, 48]
+    assert vo.observations[3].cluster.count("H100-SXM") == 40
+
+
+def test_sharegpt_longbench_phases_table14():
+    trs = sharegpt_longbench_traces()
+    sg = trs["sharegpt"]
+    assert len(sg) == 6
+    assert sg.observations[0].workloads[0].prefill_len == 1232
+    lb = trs["longbench"]
+    assert lb.observations[0].workloads[0].decode_len == 5
+    assert lb.observations[3].workloads[0].prefill_len == 1605
+
+
+def test_maf_cluster_schedule_table16():
+    trs = maf_traces()
+    sizes = [o.cluster.total for o in trs["maf-1"].observations]
+    assert sizes[0] == 24 and max(sizes) == 64 and sizes[-1] == 43
+    assert len(sizes) == 35
+
+
+def test_agentic_traces_disjoint_and_sized():
+    trs = agentic_traces()
+    a, b = trs["agentic-1"], trs["agentic-2"]
+    assert len(a.workflows) == len(b.workflows) == 64
+    assert a.n_calls != b.n_calls or a.workflows != b.workflows
+    for wf in a.workflows:
+        assert 2 <= len(wf) <= 5
+        for c in wf:
+            assert 0 < c.prefill_len <= 4096 and 0 < c.decode_len <= 2048

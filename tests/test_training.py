@@ -1,0 +1,114 @@
+"""Training loop, checkpointing, fault tolerance, gradient compression."""
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.training import checkpoint as ck
+from repro.training import data as dl
+from repro.training import optim
+from repro.training.trainer import TrainConfig, make_accum_train_step, train
+
+CFG = get_config("qwen2-1.5b").reduced()
+OPT = optim.AdamWConfig(lr=5e-3, warmup_steps=5, weight_decay=0.0)
+DCFG = dl.DataConfig(vocab_size=CFG.vocab_size, seq_len=64, global_batch=8)
+
+
+def test_loss_decreases():
+    r = train(CFG, TrainConfig(steps=50, microbatches=2, opt=OPT), DCFG)
+    assert r.losses[-1] < r.losses[0] - 0.8
+
+
+def test_checkpoint_resume_identical_stream():
+    with tempfile.TemporaryDirectory() as d:
+        r1 = train(CFG, TrainConfig(steps=20, ckpt_every=10, ckpt_dir=d,
+                                    opt=OPT), DCFG)
+        r2 = train(CFG, TrainConfig(steps=24, ckpt_every=10, ckpt_dir=d,
+                                    opt=OPT), DCFG)
+        assert r2.resumed_from == 20
+        assert r2.steps_done == 24
+
+
+def test_checkpoint_atomicity_crash_sim():
+    """A leftover .tmp dir (simulated crash) never becomes the restore point."""
+    with tempfile.TemporaryDirectory() as d:
+        from repro.models import lm
+        params = {"w": jnp.ones((4,))}
+        ck.save(d, 5, params)
+        # simulate crashed write of step 9
+        broken = Path(d) / "step_9.tmp"
+        broken.mkdir()
+        (broken / "0.npy").write_bytes(b"garbage")
+        assert ck.latest_step(d) == 5
+        restored, step, _ = ck.restore(d, params)
+        assert step == 5
+        np.testing.assert_array_equal(restored["w"], params["w"])
+
+
+def test_checkpoint_shape_validation():
+    with tempfile.TemporaryDirectory() as d:
+        ck.save(d, 1, {"w": jnp.ones((4,))})
+        with pytest.raises(ValueError):
+            ck.restore(d, {"w": jnp.ones((5,))})
+
+
+def test_async_checkpointer_gc():
+    with tempfile.TemporaryDirectory() as d:
+        acp = ck.AsyncCheckpointer(d, keep=2)
+        for s in (1, 2, 3, 4):
+            acp.save(s, {"w": jnp.full((2,), float(s))})
+        acp.wait()
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in Path(d).glob("step_*"))
+        assert steps == [3, 4]
+        restored, step, _ = ck.restore(d, {"w": jnp.zeros((2,))})
+        assert step == 4 and float(restored["w"][0]) == 4.0
+
+
+def test_nan_guard_skips_poisoned_update():
+    params = {"w": jnp.ones((4,))}
+    opt_state = optim.init_state(params)
+    import repro.models.zoo as zoo
+
+    # craft a step whose grads are NaN by monkeypatching loss
+    step = make_accum_train_step(CFG, OPT, 1)
+    batch = dl.batch_at(DCFG, 0)
+    from repro.models import lm
+    real_params = lm.init_params(CFG, jax.random.PRNGKey(0))
+    real_opt = optim.init_state(real_params)
+    poisoned = jax.tree.map(lambda x: x * jnp.nan, real_params)
+    loss, p2, o2, ok = jax.jit(step)(poisoned, real_opt, batch)
+    assert not bool(ok)
+    # params unchanged when ok is False
+    np.testing.assert_array_equal(jax.tree.leaves(p2)[0],
+                                  jax.tree.leaves(poisoned)[0])
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    b1 = dl.batch_at(DCFG, 17)
+    b2 = dl.batch_at(DCFG, 17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    s = dl.stream(DCFG, start_step=17)
+    np.testing.assert_array_equal(next(s)["tokens"], b1["tokens"])
+
+
+def test_compressed_allreduce_error_feedback():
+    from repro.distributed.compression import (compressed_allreduce,
+                                               dequantize_int8, quantize_int8)
+    x = jnp.linspace(-1.0, 1.0, 64)
+    q, s = quantize_int8(x)
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 + 1e-6
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    g = {"w": jnp.ones((1, 8, 8)) * 0.3}
+    red, e = compressed_allreduce(g, mesh, "data")
+    assert abs(float(red["w"].mean()) - 0.3) < 1e-2
+    # error feedback: residual carried, second round corrects
+    red2, e2 = compressed_allreduce(g, mesh, "data", error_state=e)
+    two_round = (float(red["w"].mean()) + float(red2["w"].mean())) / 2
+    assert abs(two_round - 0.3) <= abs(float(red["w"].mean()) - 0.3) + 1e-9
