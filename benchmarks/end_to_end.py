@@ -11,6 +11,7 @@ from benchmarks.common import baseline, emit, env, save_json
 from repro.core.evolution import EvolutionConfig
 from repro.core.policy import seed_policies
 from repro.core.runtime import Autopoiesis
+from repro.serving.backend import SimBackend
 from repro.traces.workload import (_hetero_cluster, maf_traces,
                                    sharegpt_longbench_traces)
 
@@ -33,10 +34,12 @@ def run() -> list:
     improvements = []
     for label, trace, base_name in scenarios:
         base_res = ev.evaluate(baseline(base_name), trace)
+        # plans execute through the Backend abstraction (simulator-backed at
+        # cluster scale; swap in a JaxBackend to serve on real engines)
         ap = Autopoiesis(ev, seed_policies()["hybrid-threshold"],
                          EvolutionConfig(max_iterations=15, patience=15,
                                          evolution_timeout_s=90, seed=0),
-                         window=8, evolve_every=2)
+                         window=8, evolve_every=2, backend=SimBackend(sim))
         # continuous deployment: first pass over the trace is the adaptation
         # period (policy evolves on live snapshots); the second pass is the
         # measured window — the same phases recur, as in production diurnals

@@ -21,6 +21,7 @@ MODULES = [
     ("appG", "benchmarks.policy_deepdive"),
     ("kernels", "benchmarks.kernels_micro"),
     ("roofline", "benchmarks.roofline"),
+    ("engine", "benchmarks.serving_engine"),
 ]
 
 

@@ -1,46 +1,32 @@
-"""End-to-end driver: a REAL JAX serving engine governed by the Autopoiesis
+"""End-to-end driver: a REAL JAX engine pool governed by the Autopoiesis
 two-plane runtime.
 
-The data plane serves batched requests through the continuous-batching engine
-(a reduced qwen2 model on the host devices); the control plane concurrently
-evolves the serving policy against the cluster-scale simulator and hot-swaps
-superior policy code mid-serving.
+The data plane executes every serving plan on a plan-driven EnginePool
+(reduced qwen2 replicas on the host devices): plan diffs rebuild only the
+replica groups that changed, and the rebuild wall-clock is *measured*, not
+simulated.  The control plane concurrently evolves the serving policy
+against the cluster-scale simulator and hot-swaps superior policy code
+mid-serving; each interval's measured TTFT/TPOT/tok/s/reconfig feed back
+into the snapshot buffer the next evolution cycle trains on.
 
     PYTHONPATH=src python examples/serve_autopoiesis.py
 """
 import time
 
-import jax
-
-from repro.configs import get_config
 from repro.core.evaluator import Evaluator
 from repro.core.evolution import EvolutionConfig
 from repro.core.plan import HARDWARE, QWEN25_FAMILY
 from repro.core.policy import seed_policies
 from repro.core.runtime import Autopoiesis
 from repro.core.simulator import Simulator
-from repro.models import lm
-from repro.serving.engine import Engine, Request
+from repro.serving.backend import make_jax_backend
 from repro.traces import volatile_workload_trace
 
 
 def main():
-    # ---------------- real JAX engine (the physical data plane) -------------
-    cfg = get_config("qwen2-1.5b").reduced()
-    params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, n_slots=4, max_seq_len=96)
-    applied_plans = []
-
-    def backend_apply(plan, ctx):
-        """Plan → engine reconfiguration (per-replica batch → slot count)."""
-        applied_plans.append(plan)
-        groups = plan.for_model(plan.groups[0].model) if plan.groups else []
-        # here a production deployment would resize/migrate engine replicas;
-        # we log the directive the plan issues
-        if groups:
-            g = groups[0]
-            print(f"    [engine] plan applied: {g.gpu_type} tp={g.tp} "
-                  f"batch={g.batch} × {g.count} replicas")
+    # ---------------- real JAX engine pool (the physical data plane) --------
+    backend = make_jax_backend("qwen2-1.5b", max_seq_len=96, slots_cap=4,
+                               max_replicas_per_group=1, requests_per_model=1)
 
     # ---------------- two-plane Autopoiesis runtime --------------------------
     models = {m.name: m for m in QWEN25_FAMILY.values()}
@@ -49,32 +35,48 @@ def main():
     ap = Autopoiesis(evaluator, seed_policies()["greedy-reactive"],
                      EvolutionConfig(max_iterations=10, patience=10,
                                      evolution_timeout_s=45, seed=0),
-                     window=8, evolve_every=3, backend_apply=backend_apply)
+                     window=8, evolve_every=3, backend=backend)
+    # blend measured reconfiguration wall-clock into the fitness accounting
+    ap.data_plane.acc.measured_blend = 0.25
+    ap.data_plane.acc.measured_scale = 50.0   # toy-engine seconds → cluster
 
     trace = volatile_workload_trace()
     print("running the self-evolving loop over the runtime trace…")
     t0 = time.monotonic()
-    served_tokens = 0
+    swapped_since_cycle = False
     for i, obs in enumerate(trace.observations):
         out = ap.data_plane.step(obs)
-        # serve a burst of real requests through the JAX engine each step
-        for r in range(3):
-            engine.submit(Request(rid=i * 10 + r, prompt=[1 + r, 2, 3],
-                                  max_new_tokens=6))
-        done = engine.run_until_drained()
-        served_tokens = sum(len(d.generated) for d in engine.finished)
+        rep, met = out["reconfig_report"], out["metrics"]
         flag = " [HOT-SWAP]" if out["hot_swapped"] else ""
-        print(f"  step {i}: rescheduled={out['rescheduled']} "
-              f"interval={out['interval_total']:.1f}s{flag}")
+        swapped_since_cycle = swapped_since_cycle or out["hot_swapped"]
+        line = (f"  step {i}: rescheduled={out['rescheduled']} "
+                f"interval={out['interval_total']:.1f}s{flag}")
+        if rep is not None and rep.changed:
+            who = " evolved-policy" if swapped_since_cycle else " seed-policy"
+            line += (f"\n    [pool]{who} reconfig: built={len(rep.built)} "
+                     f"reused={len(rep.reused)} removed={len(rep.removed)} "
+                     f"drained={rep.drained_requests} "
+                     f"measured={rep.wall_s * 1e3:.1f}ms "
+                     f"(sim estimate {rep.simulated_s:.1f}s)")
+        if met is not None:
+            line += (f"\n    [serve] {met.requests} req {met.tokens} tok "
+                     f"ttft={met.ttft_s * 1e3:.0f}ms tpot={met.tpot_s * 1e3:.0f}ms "
+                     f"{met.tokens_per_s:.1f} tok/s")
+        print(line)
         if i > 0 and i % 3 == 0:
             ap.control_plane.run_cycle(ap.data_plane.policy)
 
     acc = ap.data_plane.acc
+    measured_recs = [r for r in acc.records if r.measured_reconfig_s > 0]
     print(f"\nT_total={acc.T_total:.1f}s  N={acc.N}  "
           f"policy swaps={ap.data_plane.swap_count}  "
           f"evolution cycles={ap.control_plane.cycles}")
-    print(f"real engine: {len(engine.finished)} requests, "
-          f"{served_tokens} tokens in {time.monotonic() - t0:.1f}s wall")
+    print(f"pool: {backend.pool.reconfig_count} reconfigurations, "
+          f"{len(measured_recs)} interval records carry measured reconfig "
+          f"wall-clock (Σ={acc.sum_measured_reconfig * 1e3:.1f}ms), "
+          f"{len(backend.pool.finished)} requests served on real engines "
+          f"({backend.pool.total_dispatches} jitted dispatches) "
+          f"in {time.monotonic() - t0:.1f}s wall")
 
 
 if __name__ == "__main__":

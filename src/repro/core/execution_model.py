@@ -28,6 +28,24 @@ from repro.core.plan import Plan, Workload
 from repro.core.simulator import PENALTY, Simulator
 
 
+@dataclass(frozen=True)
+class IntervalMetrics:
+    """Measured serving-interval feedback from a real backend (Table 1's
+    artifact fields, but observed instead of simulated).  ``measured`` is
+    False for simulator-backed intervals — such metrics are recorded but
+    never blended into the cost accounting."""
+    requests: int = 0
+    tokens: int = 0
+    wall_s: float = 0.0
+    ttft_s: float = 0.0              # mean time-to-first-token
+    tpot_s: float = 0.0              # mean time-per-output-token
+    tokens_per_s: float = 0.0
+    reconfig_s: float = 0.0          # measured engine-rebuild wall-clock
+    simulated_serve_s: float = 0.0
+    backlogged: int = 0              # requests no replica could take this interval
+    measured: bool = True
+
+
 @dataclass
 class IntervalRecord:
     timestamp_idx: int
@@ -38,22 +56,37 @@ class IntervalRecord:
     t_serve: float = 0.0
     serve_full: float = 0.0          # serve_time(plan_i, W_i) at full efficiency
     plan_changed: bool = False
+    metrics: Optional[IntervalMetrics] = None   # measured backend feedback
 
     @property
     def total(self) -> float:
         return self.t_stale + self.t_reconfig + self.t_serve
+
+    @property
+    def measured_reconfig_s(self) -> float:
+        return self.metrics.reconfig_s if (self.metrics is not None
+                                           and self.metrics.measured) else 0.0
 
 
 @dataclass
 class ExecutionAccumulator:
     sim: Simulator
     records: List[IntervalRecord] = field(default_factory=list)
+    # Blend weight for measured vs simulated reconfiguration cost.  0.0 keeps
+    # the pure-simulated accounting (bit-identical to the pre-backend path);
+    # 1.0 trusts the measured wall-clock entirely.  ``measured_scale`` maps
+    # backend wall-clock seconds onto cluster-scale simulator seconds
+    # (reduced-model engines run orders of magnitude below production).
+    measured_blend: float = 0.0
+    measured_scale: float = 1.0
 
     def interval(self, idx: int, old_plan: Optional[Plan], new_plan: Plan,
                  workloads: List[Workload], t_sched: float,
-                 rescheduled: bool) -> IntervalRecord:
+                 rescheduled: bool,
+                 measured: Optional[IntervalMetrics] = None) -> IntervalRecord:
         serve_new = self.sim.serve_cost(new_plan, workloads)
-        rec = IntervalRecord(idx, rescheduled, serve_full=serve_new)
+        rec = IntervalRecord(idx, rescheduled, serve_full=serve_new,
+                             metrics=measured)
         if not rescheduled:
             rec.t_serve = serve_new
             self.records.append(rec)
@@ -73,6 +106,11 @@ class ExecutionAccumulator:
         serve_old = self.sim.serve_cost(old_plan, workloads)
         e_old = 0.0 if serve_old >= PENALTY else min(serve_new / max(serve_old, 1e-9), 1.0)
         t_rc = self.sim.reconfig_cost(old_plan, new_plan)
+        if (measured is not None and measured.measured
+                and self.measured_blend > 0.0):
+            t_rc = ((1.0 - self.measured_blend) * t_rc
+                    + self.measured_blend * self.measured_scale
+                    * measured.reconfig_s)
         # overlap fraction: share of devices whose assignment is unchanged
         same = len(set(old_plan.groups) & set(new_plan.groups))
         denom = max(len(new_plan.groups), 1)
@@ -110,3 +148,7 @@ class ExecutionAccumulator:
     @property
     def sum_serve(self) -> float:
         return sum(r.t_serve for r in self.records)
+
+    @property
+    def sum_measured_reconfig(self) -> float:
+        return sum(r.measured_reconfig_s for r in self.records)

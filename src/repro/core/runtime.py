@@ -13,20 +13,24 @@ Both planes can run threaded (``run_async``) or be stepped deterministically
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Callable, Deque, Dict, List, Optional
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional
 
 from repro.core.evaluator import Evaluator
 from repro.core.evolution import Evolution, EvolutionConfig, EvolutionState
 from repro.core.mutation import Mutator
-from repro.core.execution_model import ExecutionAccumulator
+from repro.core.execution_model import ExecutionAccumulator, IntervalMetrics
 from repro.core.plan import ClusterState, Ctx, Plan, Workload
 from repro.core.policy import Policy
 from repro.traces.workload import TimestampObservation, Trace
+
+if TYPE_CHECKING:                    # structural Backend protocol lives in
+    from repro.serving.backend import Backend   # serving; core stays import-free
 
 
 # --------------------------------------------------------------------------- #
@@ -79,7 +83,7 @@ class SnapshotBuffer:
             obs = list(self._buf)[-window:]
         models = tuple(sorted({w.model for o in obs for w in o.workloads}))
         reindexed = tuple(
-            TimestampObservation(i, o.time, o.workloads, o.cluster)
+            TimestampObservation(i, o.time, o.workloads, o.cluster, o.metrics)
             for i, o in enumerate(obs))
         return Trace(name, reindexed, models)
 
@@ -93,7 +97,7 @@ class DataPlane:
     policy: Policy
     stage: PolicyStage
     buffer: SnapshotBuffer
-    backend_apply: Optional[Callable[[Plan, Ctx], None]] = None
+    backend: Optional["Backend"] = None        # plan execution target
     acc: ExecutionAccumulator = None
     plan: Optional[Plan] = None
     swap_count: int = 0
@@ -126,8 +130,8 @@ class DataPlane:
         return True
 
     def step(self, obs: TimestampObservation) -> Dict:
-        """One monitoring step: record, hot-swap, trigger, schedule, serve."""
-        self.buffer.record(obs)
+        """One monitoring step: hot-swap, trigger, schedule, apply the plan to
+        the backend, serve the interval, record the (measured) observation."""
         swapped = self.maybe_hot_swap()
         ctx = Ctx(time=obs.time, timestamp_idx=self._step_idx,
                   workloads=list(obs.workloads), cluster=obs.cluster,
@@ -143,26 +147,40 @@ class DataPlane:
             forced = not ok
         trigger = (self.plan is None or forced
                    or self.policy.should_reschedule(ctx))
+        report = None
+        metrics: Optional[IntervalMetrics] = None
         if trigger:
             t0 = time.monotonic()
             new_plan = self.policy.schedule(ctx)
             dt = (time.monotonic() - t0) * self.evaluator.sched_time_scale
+            if self.backend is not None:
+                report = self.backend.apply_plan(new_plan, ctx)
+                metrics = self._serve(obs, reconfig_s=report.wall_s)
             rec = self.acc.interval(self._step_idx, self.plan, new_plan,
                                     list(obs.workloads), t_sched=dt,
-                                    rescheduled=True)
-            if self.backend_apply is not None:
-                self.backend_apply(new_plan, ctx)
+                                    rescheduled=True, measured=metrics)
             self.plan = new_plan
             self._last_w, self._last_c = list(obs.workloads), obs.cluster
             self._scratch["steps_since_resched"] = 0
         else:
+            if self.backend is not None:
+                metrics = self._serve(obs, reconfig_s=0.0)
             rec = self.acc.interval(self._step_idx, self.plan, self.plan,
                                     list(obs.workloads), t_sched=0.0,
-                                    rescheduled=False)
+                                    rescheduled=False, measured=metrics)
             self._scratch["steps_since_resched"] += 1
+        # the snapshot buffer sees what the interval actually measured
+        self.buffer.record(dataclasses.replace(obs, metrics=metrics)
+                           if metrics is not None else obs)
         self._step_idx += 1
         return {"rescheduled": rec.rescheduled, "interval_total": rec.total,
-                "hot_swapped": swapped, "plan": self.plan}
+                "hot_swapped": swapped, "plan": self.plan,
+                "reconfig_report": report, "metrics": metrics}
+
+    def _serve(self, obs: TimestampObservation,
+               reconfig_s: float) -> IntervalMetrics:
+        metrics = self.backend.serve_interval(list(obs.workloads))
+        return dataclasses.replace(metrics, reconfig_s=reconfig_s)
 
 
 # --------------------------------------------------------------------------- #
@@ -213,7 +231,7 @@ class Autopoiesis:
     evolution_cfg: EvolutionConfig
     window: int = 16
     mutator: Optional[Mutator] = None
-    backend_apply: Optional[Callable[[Plan, Ctx], None]] = None
+    backend: Optional["Backend"] = None
     evolve_every: int = 4                       # control cycle cadence (steps)
 
     def __post_init__(self):
@@ -221,7 +239,7 @@ class Autopoiesis:
         self.buffer = SnapshotBuffer(capacity=4 * self.window)
         self.data_plane = DataPlane(self.evaluator, self.initial_policy,
                                     self.stage, self.buffer,
-                                    backend_apply=self.backend_apply)
+                                    backend=self.backend)
         self.control_plane = ControlPlane(self.evaluator, self.stage,
                                           self.buffer, self.evolution_cfg,
                                           window=self.window,

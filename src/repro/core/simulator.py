@@ -37,8 +37,9 @@ class Simulator:
     hardware: Dict[str, GPUType]
     # multiplicative efficiency calibration: (model, gpu) -> factor on Λ
     calibration: Dict[Tuple[str, str], float] = field(default_factory=dict)
-    # cache: Λ memo
+    # caches: Λ memo + plan-level serve-cost memo (Plan/Workload are frozen)
     _memo: Dict[Tuple, float] = field(default_factory=dict)
+    _serve_memo: Dict[Tuple, float] = field(default_factory=dict)
 
     # ------------------------------------------------------------------ #
     # roofline op model (Eqs. 3–4)
@@ -145,17 +146,15 @@ class Simulator:
         groups = plan.for_model(w.model)
         if not groups:
             return PENALTY
-        remaining = w.batch
         worst = 0.0
         cap = sum(g.capacity for g in groups)
         if cap <= 0:
             return PENALTY
         for g in groups:
             share = math.ceil(w.batch * g.capacity / cap / max(g.count, 1))
-            share = min(share, g.batch)
+            share = max(min(share, g.batch), 1)
             waves = math.ceil(w.batch * (g.capacity / cap) / max(g.capacity, 1))
-            lat = self.group_latency(w.model, g.gpu_type, g.tp,
-                                     min(g.batch, max(share, 1)),
+            lat = self.group_latency(w.model, g.gpu_type, g.tp, share,
                                      w.prefill_len, w.decode_len)
             worst = max(worst, lat * max(waves, 1))
         return worst
@@ -164,7 +163,11 @@ class Simulator:
         """SERVE-COST(σ): makespan across concurrently-served models."""
         if plan is None or not plan.groups:
             return PENALTY
-        return max(self.model_latency(plan, w) for w in workloads)
+        key = (plan, tuple(workloads))
+        if key not in self._serve_memo:
+            self._serve_memo[key] = max(self.model_latency(plan, w)
+                                        for w in workloads)
+        return self._serve_memo[key]
 
     # ------------------------------------------------------------------ #
     # reconfiguration cost (Eqs. 8–11)
@@ -208,3 +211,4 @@ class Simulator:
 
     def clear_memo(self) -> None:
         self._memo.clear()
+        self._serve_memo.clear()

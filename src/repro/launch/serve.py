@@ -1,9 +1,11 @@
 """Serving driver: ``python -m repro.launch.serve --arch <id>``.
 
-Boots the continuous-batching JAX engine on a reduced config, runs a batch of
-synthetic requests, and (with ``--autopoiesis``) wires the Autopoiesis
-two-plane runtime on top: the engine is the data-plane backend whose plan's
-per-replica batch maps to engine slots.
+Boots the plan-driven engine pool on a reduced config: a serving plan maps
+each replica group to continuous-batching JAX engines (chunked prefill +
+single-dispatch decode).  A batch of synthetic requests is routed across the
+replicas; ``--resize`` then applies a second plan with a different
+per-replica batch to demonstrate a measured (wall-clock) reconfiguration —
+unchanged groups keep their warm engines.
 """
 from __future__ import annotations
 
@@ -13,8 +15,10 @@ import time
 import jax
 
 from repro.configs import get_config, list_archs
+from repro.core.plan import Plan, ReplicaGroup
 from repro.models import lm
-from repro.serving.engine import Engine, Request
+from repro.serving.backend import JaxBackend
+from repro.serving.engine import Request
 
 
 def main() -> int:
@@ -22,22 +26,47 @@ def main() -> int:
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--resize", action="store_true",
+                    help="apply a second plan (halved batch) and report the "
+                         "measured reconfiguration wall-clock")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, n_slots=args.slots, max_seq_len=128)
+    backend = JaxBackend(cfg, params, max_seq_len=128, slots_cap=args.slots,
+                         max_replicas_per_group=args.replicas)
+    model = cfg.name
+    plan = Plan((ReplicaGroup(model, "H100-80G", tp=1, batch=args.slots,
+                              count=args.replicas),))
+    report = backend.apply_plan(plan, None)
+    print(f"plan applied: built={len(report.built)} groups "
+          f"({args.replicas}×{args.slots}-slot engines) "
+          f"in {report.wall_s * 1e3:.1f}ms")
+
     t0 = time.monotonic()
     for r in range(args.requests):
-        eng.submit(Request(rid=r, prompt=[1 + r % 9, 5, 7],
-                           max_new_tokens=args.max_new,
-                           arrival_time=time.monotonic()))
-    done = eng.run_until_drained()
+        backend.pool.submit(model, Request(
+            rid=r, prompt=[1 + (r + j) % 9 for j in range(args.prompt_len)],
+            max_new_tokens=args.max_new, arrival_time=time.monotonic()))
+    done = backend.pool.run_until_drained()
     dt = time.monotonic() - t0
     toks = sum(len(d.generated) for d in done)
+    disp = backend.pool.total_dispatches
     print(f"arch={args.arch} served {len(done)} requests, {toks} tokens "
-          f"in {dt:.2f}s ({toks / dt:.1f} tok/s, engine_steps={eng.steps})")
+          f"in {dt:.2f}s ({toks / dt:.1f} tok/s, jitted dispatches={disp}, "
+          f"{disp / max(len(done), 1):.1f}/request)")
+
+    if args.resize:
+        plan2 = Plan((ReplicaGroup(model, "H100-80G", tp=1,
+                                   batch=max(args.slots // 2, 1),
+                                   count=args.replicas),))
+        rep2 = backend.apply_plan(plan2, None)
+        print(f"resize: rebuilt={len(rep2.built)} reused={len(rep2.reused)} "
+              f"removed={len(rep2.removed)} drained={rep2.drained_requests} "
+              f"measured reconfig={rep2.wall_s * 1e3:.1f}ms")
     return 0
 
 

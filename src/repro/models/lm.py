@@ -345,12 +345,31 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
 
     Returns (logits (B, 1, V), updated cache).
     """
+    return step_with_cache(params, cfg, cache, tokens, positions[:, None])
+
+
+def prefill_step(params: Params, cfg: ModelConfig, cache: Params,
+                 tokens: jax.Array, positions: jax.Array
+                 ) -> Tuple[jax.Array, Params]:
+    """Chunked prefill: advance C tokens against the cache in ONE dispatch.
+
+    tokens: (B, C) int32; positions: (B, C) int32, contiguous per row
+    (cache writes land at positions[:, 0] .. positions[:, 0] + C - 1; a
+    chunk must not wrap a rolling SWA buffer — the engine picks chunk sizes
+    that divide the buffer length).  Returns (logits (B, C, V), new cache).
+    """
+    return step_with_cache(params, cfg, cache, tokens, positions)
+
+
+def step_with_cache(params: Params, cfg: ModelConfig, cache: Params,
+                    tokens: jax.Array, pos2: jax.Array
+                    ) -> Tuple[jax.Array, Params]:
+    """Cache-backed forward over a token chunk. tokens/pos2: (B, C) int32."""
     B = tokens.shape[0]
     dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
     x = params["embed"][tokens].astype(dtype)
     if cfg.local_global_every:
         x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
-    pos2 = positions[:, None]                                  # (B,1)
 
     if cfg.family == "ssm":
         def body(h, xs):
@@ -447,6 +466,22 @@ def decode_step(params: Params, cfg: ModelConfig, cache: Params,
     logits = x @ head.astype(x.dtype)
     logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
     return logits, new_cache
+
+
+def reset_slots(cfg: ModelConfig, cache: Params, reset: jax.Array) -> Params:
+    """Clear the cache of batch slots flagged in ``reset`` (B,) bool: position
+    buffers back to -1 (empty), everything else — KV, SSM/conv recurrent
+    state — to zero.  Attention caches are already protected from stale
+    occupants by kpos masking, but recurrent SSM state is continued
+    unconditionally, so a reused slot MUST be wiped before prefill."""
+    def one(kp, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k))) for k in kp]
+        nstack = 2 if ("groups" in names and names[-1] in ("conv", "ssm")) else 1
+        m = reset.reshape([1] * nstack + [-1] + [1] * (leaf.ndim - nstack - 1))
+        init = jnp.asarray(-1 if names[-1].endswith("pos") else 0, leaf.dtype)
+        return jnp.where(m, init, leaf)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
 
 
 def mask_cache_update(cfg: ModelConfig, old_cache: Params, new_cache: Params,

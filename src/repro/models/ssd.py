@@ -132,8 +132,10 @@ def mamba2_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     """Mamba-2 block. x: (B, S, d).
 
-    state = (conv_state (B, d_conv-1, conv_dim), ssm_state (B, h, p, n)) for
-    decode (S==1); None for full-sequence processing.
+    state = (conv_state (B, d_conv-1, conv_dim), ssm_state (B, h, p, n)) to
+    continue from a previous call: S == 1 uses the cheap recurrent step, S > 1
+    runs the chunked scan seeded with the carried state (chunked prefill).
+    state = None processes x as a fresh full sequence.
     Returns (y, new_state).
     """
     s: SSMConfig = cfg.ssm
@@ -149,20 +151,37 @@ def mamba2_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
                          + p["dt_bias"][None, None, :])      # (B,S,nh)
     A = -jnp.exp(p["A_log"])                                 # (nh,) negative
 
-    if state is None:
-        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    if state is None or S > 1:
+        xBC_raw = zxbcdt[..., di:di + conv_dim]               # pre-conv inputs
+        if state is None:
+            prev_conv, prev_ssm = None, None
+            xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+        else:
+            # chunked continuation: conv sees the carried d_conv-1 history
+            # instead of zero padding, the scan seeds from the carried state
+            prev_conv, prev_ssm = state
+            ext = jnp.concatenate([prev_conv.astype(xBC_raw.dtype), xBC_raw],
+                                  axis=1)                     # (B, K-1+S, C)
+            K = p["conv_w"].shape[0]
+            conv = sum(ext[:, i:i + S, :]
+                       * p["conv_w"][i][None, None, :].astype(x.dtype)
+                       for i in range(K)) + p["conv_b"][None, None, :].astype(x.dtype)
+            xBC = jax.nn.silu(conv)
         xs, Bmat, Cmat = jnp.split(xBC, [di, di + gn], axis=-1)
         xs = xs.reshape(B_, S, nh, s.head_dim)
         Bmat = Bmat.reshape(B_, S, s.n_groups, s.d_state)
         Cmat = Cmat.reshape(B_, S, s.n_groups, s.d_state)
-        y, fin = ssd_chunked(xs, dt, A, Bmat, Cmat, min(s.chunk_size, S))
+        y, fin = ssd_chunked(xs, dt, A, Bmat, Cmat, min(s.chunk_size, S),
+                             initial_state=prev_ssm)
         conv_tail_len = s.d_conv - 1
         # conv state for potential continuation: last d_conv-1 pre-activation inputs
+        src = xBC_raw if state is None else ext
+        Ssrc = src.shape[1]
         conv_state = jax.lax.dynamic_slice_in_dim(
-            zxbcdt[..., di:di + conv_dim], max(S - conv_tail_len, 0),
-            min(conv_tail_len, S), axis=1)
-        if S < conv_tail_len:
-            conv_state = jnp.pad(conv_state, ((0, 0), (conv_tail_len - S, 0), (0, 0)))
+            src, max(Ssrc - conv_tail_len, 0), min(conv_tail_len, Ssrc), axis=1)
+        if Ssrc < conv_tail_len:
+            conv_state = jnp.pad(conv_state,
+                                 ((0, 0), (conv_tail_len - Ssrc, 0), (0, 0)))
         new_state = (conv_state, fin)
     else:
         conv_state, ssm_state = state

@@ -1,2 +1,7 @@
-"""Real-JAX serving data plane: continuous batching over the model zoo."""
+"""Real-JAX serving data plane: continuous batching over the model zoo,
+plan-driven engine pools, and the Backend protocol the runtime applies
+serving plans through."""
+from repro.serving.backend import (Backend, JaxBackend, ReconfigReport,  # noqa: F401
+                                   SimBackend, make_jax_backend)
 from repro.serving.engine import Engine, Request, RequestState  # noqa: F401
+from repro.serving.pool import EnginePool, PoolDiff  # noqa: F401

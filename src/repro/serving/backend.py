@@ -1,0 +1,183 @@
+"""Backend abstraction: how the data plane *executes* a serving plan.
+
+The control plane evolves policies; the data plane applies the resulting
+plans to a backend and feeds what actually happened back into the
+evolution loop:
+
+  * :class:`SimBackend` — closes the loop against the roofline simulator
+    (exactly the pre-backend accounting; ``IntervalMetrics.measured`` is
+    False so nothing is blended into fitness).
+  * :class:`JaxBackend` — a real multi-replica :class:`EnginePool` over the
+    JAX engines.  ``apply_plan`` measures actual rebuild wall-clock;
+    ``serve_interval`` runs real requests and measures TTFT/TPOT/tok/s.
+
+Both satisfy the same two-method protocol, so DataPlane.step is agnostic.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.execution_model import IntervalMetrics
+from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
+from repro.core.simulator import Simulator
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.pool import EnginePool, PoolDiff
+
+
+@dataclass(frozen=True)
+class ReconfigReport:
+    """What applying a plan did, and what it cost."""
+    wall_s: float                    # measured reconfiguration wall-clock
+    simulated_s: float               # RECONFIG-COST estimate for the same diff
+    built: Tuple[ReplicaGroup, ...] = ()
+    reused: Tuple[ReplicaGroup, ...] = ()
+    removed: Tuple[ReplicaGroup, ...] = ()
+    drained_requests: int = 0
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.built or self.removed)
+
+
+@runtime_checkable
+class Backend(Protocol):
+    """Data-plane execution target for serving plans."""
+
+    def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
+        """Reconfigure to ``plan``; returns measured + simulated cost."""
+        ...
+
+    def serve_interval(self, workloads: Sequence[Workload]) -> IntervalMetrics:
+        """Serve one monitoring interval's workloads under the current plan."""
+        ...
+
+
+# --------------------------------------------------------------------------- #
+# simulator-backed (closes the loop without hardware)
+# --------------------------------------------------------------------------- #
+@dataclass
+class SimBackend:
+    """Plan execution modelled by the roofline simulator.  Produces the same
+    interval totals as the pre-backend accounting path (metrics carry
+    ``measured=False`` and are never blended into fitness)."""
+    sim: Simulator
+    plan: Optional[Plan] = None
+    applied: List[Plan] = field(default_factory=list)
+
+    def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
+        sim_cost = self.sim.reconfig_cost(self.plan, plan)
+        old_groups = set(self.plan.groups) if self.plan is not None else set()
+        new_groups = set(plan.groups)
+        self.plan = plan
+        self.applied.append(plan)
+        # same group-set diff semantics as EnginePool.reconfigure — dropping
+        # a model entirely is a change even if every surviving group matches
+        return ReconfigReport(
+            wall_s=0.0, simulated_s=sim_cost,
+            built=tuple(sorted(new_groups - old_groups, key=repr)),
+            reused=tuple(sorted(new_groups & old_groups, key=repr)),
+            removed=tuple(sorted(old_groups - new_groups, key=repr)))
+
+    def serve_interval(self, workloads: Sequence[Workload]) -> IntervalMetrics:
+        serve_s = self.sim.serve_cost(self.plan, list(workloads))
+        tokens = sum(w.batch * (w.prefill_len + w.decode_len) for w in workloads)
+        return IntervalMetrics(
+            requests=sum(w.batch for w in workloads), tokens=tokens,
+            wall_s=serve_s, tokens_per_s=tokens / serve_s if serve_s > 0 else 0.0,
+            simulated_serve_s=serve_s, measured=False)
+
+
+# --------------------------------------------------------------------------- #
+# real JAX engine pool
+# --------------------------------------------------------------------------- #
+@dataclass
+class JaxBackend:
+    """Physical data plane: a reduced-config model zoo engine per replica.
+
+    One ``(cfg, params)`` stands in for every logical model in the plan (the
+    cluster-scale models do not fit a CPU test host); the *topology* — how
+    many replicas, what per-replica batch, what gets rebuilt on a plan
+    change — is exercised for real, and all costs are measured wall-clock.
+    """
+    cfg: ModelConfig
+    params: object
+    max_seq_len: int = 96
+    slots_cap: int = 8               # per-replica engine slots cap
+    max_replicas_per_group: int = 2
+    requests_per_model: int = 3      # synthetic requests per workload model
+    max_new_tokens: int = 6
+    pool: EnginePool = field(init=False)
+    _rid: int = 0
+
+    def __post_init__(self):
+        self.pool = EnginePool(self._make_engine,
+                               max_replicas_per_group=self.max_replicas_per_group)
+
+    def _make_engine(self, group: ReplicaGroup) -> Engine:
+        return Engine(self.cfg, self.params,
+                      n_slots=max(1, min(group.batch, self.slots_cap)),
+                      max_seq_len=self.max_seq_len)
+
+    # ------------------------------------------------------------------ #
+    def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
+        sim_cost = 0.0
+        if ctx is not None and ctx.simulator is not None:
+            sim_cost = ctx.simulator.reconfig_cost(self.pool.plan, plan)
+        diff: PoolDiff = self.pool.reconfigure(plan)
+        return ReconfigReport(wall_s=diff.wall_s, simulated_s=sim_cost,
+                              built=diff.built, reused=diff.reused,
+                              removed=diff.removed,
+                              drained_requests=diff.drained_requests)
+
+    def serve_interval(self, workloads: Sequence[Workload]) -> IntervalMetrics:
+        """Serve a scaled-down burst per workload model and measure."""
+        t0 = time.monotonic()
+        backlogged = 0
+        for w in workloads:
+            # prompt/decode lengths scaled into the reduced engine's window
+            p_len = max(2, min(w.prefill_len // 64, self.max_seq_len // 3))
+            d_len = max(2, min(w.decode_len // 256, self.max_new_tokens))
+            for i in range(self.requests_per_model):
+                self._rid += 1
+                req = Request(rid=self._rid,
+                              prompt=[(self._rid + j) % (self.cfg.vocab_size - 1) + 1
+                                      for j in range(p_len)],
+                              max_new_tokens=d_len,
+                              arrival_time=time.monotonic())
+                if not self.pool.submit(w.model, req):
+                    # no replica serves this model under the current plan:
+                    # hold the request until a covering plan arrives rather
+                    # than dropping it silently
+                    self.pool.add_backlog(w.model, req)
+                    backlogged += 1
+        done = self.pool.run_until_drained()
+        wall = time.monotonic() - t0
+        ttfts = [d.first_token_time - d.request.arrival_time
+                 for d in done if d.first_token_time is not None]
+        tpots = [(d.finish_time - d.first_token_time) / (len(d.generated) - 1)
+                 for d in done
+                 if d.finish_time is not None and d.first_token_time is not None
+                 and len(d.generated) > 1]
+        tokens = sum(len(d.generated) for d in done)
+        return IntervalMetrics(
+            requests=len(done), tokens=tokens, wall_s=wall,
+            ttft_s=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+            tpot_s=sum(tpots) / len(tpots) if tpots else 0.0,
+            tokens_per_s=tokens / wall if wall > 0 else 0.0,
+            backlogged=backlogged,
+            measured=True)   # reconfig_s merged in by DataPlane.step
+
+
+def make_jax_backend(arch: str = "qwen2-1.5b", seed: int = 0,
+                     **kwargs) -> JaxBackend:
+    """Convenience constructor: reduced config + fresh params."""
+    from repro.configs import get_config
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    return JaxBackend(cfg, params, **kwargs)

@@ -2,15 +2,22 @@
 
 The engine maintains a fixed set of decode slots backed by the unified
 KV/SSM cache (repro.models.lm.init_cache).  Each step:
-  1. admit waiting requests into free slots (prefill one request at a time,
-     writing its KV into the slot region);
-  2. run one batched decode step for all active slots (serve_step);
+  1. admit waiting requests into free slots (chunked prefill: the prompt is
+     split into power-of-two chunks, each advanced in ONE jitted dispatch);
+  2. run one batched decode step for all active slots (inputs are assembled
+     in NumPy and shipped to the device once — no per-slot ``.at[].set``
+     dispatch chain);
   3. retire finished requests (EOS / max tokens).
 
-This is the JaxEngine backend of the Autopoiesis data plane — the plan's
+Dispatch count per request is O(log prompt_len) for prefill plus one shared
+dispatch per decode step, versus O(prompt_len) + O(n_slots) for the legacy
+per-token path (kept behind ``chunked_prefill=False`` for benchmarking).
+
+This is the JaxBackend engine of the Autopoiesis data plane — the plan's
 per-replica batch maps to ``n_slots``; reconfiguration maps to engine
-rebuilds, whose wall-clock cost is what the simulator's RECONFIG-COST models.
-Works on CPU for tests/examples and under pjit on the production mesh.
+rebuilds, whose wall-clock cost is what the simulator's RECONFIG-COST models
+(and what repro.serving.pool measures for real).  Works on CPU for
+tests/examples and under pjit on the production mesh.
 """
 from __future__ import annotations
 
@@ -20,11 +27,15 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
 
 EOS_DEFAULT = -1        # disabled unless the tokenizer defines one
+
+# candidate prefill chunk sizes (powers of two, greedy binary decomposition)
+_CHUNK_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
 
 
 @dataclass
@@ -45,23 +56,31 @@ class RequestState:
     done: bool = False
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    prefill_dispatches: int = 0
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
-                 max_seq_len: int = 256, greedy: bool = True):
+                 max_seq_len: int = 256, greedy: bool = True,
+                 chunked_prefill: bool = True, max_prefill_chunk: int = 64,
+                 truncate_long_prompts: bool = True):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
+        self.chunked_prefill = chunked_prefill
+        self.truncate_long_prompts = truncate_long_prompts
         cache_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.cache = lm.init_cache(cfg, n_slots, max_seq_len, dtype=cache_dtype)
         self.waiting: List[Request] = []
         self.active: Dict[int, RequestState] = {}       # slot -> state
         self.finished: List[RequestState] = []
         self.steps = 0
+        self.dispatches = 0          # jitted-callable invocations (perf metric)
+        self._chunk_sizes = self._allowed_chunk_sizes(max_prefill_chunk)
 
-        def _step(p, c, t, pos, active):
+        def _step(p, c, t, pos, active, reset):
+            c = lm.reset_slots(cfg, c, reset)
             logits, c2 = lm.decode_step(p, cfg, c, t, pos)
             c2 = lm.mask_cache_update(cfg, c, c2, active)
             next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
@@ -69,72 +88,183 @@ class Engine:
 
         self._decode = jax.jit(_step)
 
+        def _pstep(p, c, t, pos, active, reset):
+            # reset fuses into the step: a freshly-claimed slot is wiped of
+            # its previous occupant's KV *and* recurrent SSM state
+            c = lm.reset_slots(cfg, c, reset)
+            logits, c2 = lm.prefill_step(p, cfg, c, t, pos)
+            c2 = lm.mask_cache_update(cfg, c, c2, active)
+            # greedy token after the chunk's last position (all the caller
+            # consumes; earlier columns' logits are dead)
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return next_tok, c2
+
+        self._prefill = jax.jit(_pstep)
+
+    def _allowed_chunk_sizes(self, cap: int) -> Tuple[int, ...]:
+        """Power-of-two chunk sizes compatible with every cache family: they
+        must not violate the SSD scan's chunk-divisibility requirement, and
+        rolling SWA buffers additionally bound *where* chunks may be used —
+        a multi-token write at positions >= window evicts ring slots that
+        the chunk's own earlier queries still need, so chunking is only
+        sound while the whole prompt prefix fits the ring (see
+        ``_prefill_chunks``)."""
+        cfg = self.cfg
+        rolling: List[int] = []
+        if cfg.local_global_every == 2 and cfg.sliding_window:
+            rolling.append(min(cfg.sliding_window, self.max_seq_len))
+        elif cfg.sliding_window is not None and cfg.local_global_every == 0:
+            rolling.append(lm.cache_seq_len(cfg, self.max_seq_len))
+        self._rolling_limit = min(rolling) if rolling else None
+        ssd_chunk = cfg.ssm.chunk_size if cfg.ssm is not None else 0
+        out = []
+        for c in _CHUNK_CANDIDATES:
+            if c > max(cap, 1):
+                continue
+            if any(r % c != 0 for r in rolling):
+                continue
+            if ssd_chunk and c > ssd_chunk and c % ssd_chunk != 0:
+                continue
+            out.append(c)
+        return tuple(out) or (1,)
+
     # ------------------------------------------------------------------ #
+    def max_prompt_len(self, max_new_tokens: int = 1) -> int:
+        """Longest prompt that still fits the cache AND leaves decode room
+        for ``max_new_tokens`` before step()'s position guard trips: prefill
+        writes positions 0..P-1, decode writes P..P+max_new-2 and the guard
+        stops at max_seq_len-1."""
+        return max(1, self.max_seq_len - max(max_new_tokens, 1))
+
     def submit(self, req: Request) -> None:
+        limit = self.max_prompt_len(req.max_new_tokens)
+        if len(req.prompt) > limit:
+            if not self.truncate_long_prompts:
+                raise ValueError(
+                    f"prompt of {len(req.prompt)} tokens exceeds engine limit "
+                    f"{limit} (max_seq_len={self.max_seq_len})")
+            req = Request(req.rid, req.prompt[-limit:], req.max_new_tokens,
+                          req.eos_id, req.arrival_time)
         self.waiting.append(req)
 
     def free_slots(self) -> List[int]:
         return [s for s in range(self.n_slots) if s not in self.active]
 
+    @property
+    def load(self) -> int:
+        """Outstanding work: queued + in-flight requests (pool routing key)."""
+        return len(self.waiting) + len(self.active)
+
     # ------------------------------------------------------------------ #
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
-        """Sequential prefill through decode_step (slot-local, simple and
-        correct; the Pallas flash kernel path covers bulk prefill perf).
-        The decode step at the last prompt position yields the first
-        generated token."""
+        """Write the prompt's KV/SSM state into the slot region and produce
+        the first generated token (greedy logits at the last prompt position).
+
+        Chunked mode decomposes the prompt into descending power-of-two
+        chunks — O(log prompt_len) dispatches, exact semantics (no padding).
+        """
         st = RequestState(req, slot)
         self.active[slot] = st
-        last = 0
-        for tok in (req.prompt or [0]):
-            last = self._advance_slot(st, tok)
+        prompt = req.prompt or [0]
+        if not self.chunked_prefill:
+            last = 0
+            for i, tok in enumerate(prompt):
+                last = self._advance_slot(st, tok, wipe_slot=(i == 0))
+                st.prefill_dispatches += 1
+        else:
+            last = self._prefill_chunks(st, prompt)
         st.generated.append(last)
         st.first_token_time = time.monotonic()
 
-    def _pos_vector(self) -> jnp.ndarray:
-        """Per-slot next-write positions: spurious writes from other slots'
-        steps land on a position the slot's own next real step overwrites."""
-        pos = jnp.zeros((self.n_slots,), jnp.int32)
-        for slot, st in self.active.items():
-            pos = pos.at[slot].set(st.position)
-        return pos
+    def _prefill_chunks(self, st: RequestState, prompt: List[int]) -> int:
+        slot = st.slot
+        prompt_arr = np.asarray(prompt, np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        active[slot] = True
+        no_reset = np.zeros((self.n_slots,), bool)
+        off, last = 0, 0
+        remaining = len(prompt)
+        for c in self._chunk_sizes:
+            while remaining >= c:
+                if (self._rolling_limit is not None and c > 1
+                        and off + c > self._rolling_limit):
+                    # past the ring boundary a multi-token write would evict
+                    # keys this chunk's earlier queries attend to; only the
+                    # per-token granularity is sound there
+                    break
+                tokens = np.zeros((self.n_slots, c), np.int32)
+                positions = np.zeros((self.n_slots, c), np.int32)
+                tokens[slot] = prompt_arr[off:off + c]
+                positions[slot] = np.arange(off, off + c, dtype=np.int32)
+                # first chunk wipes the slot's previous occupant
+                reset = active if off == 0 else no_reset
+                next_tok, self.cache = self._prefill(
+                    self.params, self.cache, tokens, positions, active, reset)
+                self.dispatches += 1
+                st.prefill_dispatches += 1
+                off += c
+                remaining -= c
+                last = next_tok  # device array; fetched once after the loop
+        st.position = off
+        return int(np.asarray(last)[slot])
 
-    def _advance_slot(self, st: RequestState, token: int) -> int:
-        tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
-        tokens = tokens.at[st.slot, 0].set(token)
-        positions = self._pos_vector()
-        active = jnp.zeros((self.n_slots,), bool).at[st.slot].set(True)
+    def _advance_slot(self, st: RequestState, token: int,
+                      wipe_slot: bool = False) -> int:
+        """Legacy per-token path (one dispatch per prompt token)."""
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        tokens[st.slot, 0] = token
+        positions = np.zeros((self.n_slots,), np.int32)
+        for slot, s in self.active.items():
+            positions[slot] = s.position
+        active = np.zeros((self.n_slots,), bool)
+        active[st.slot] = True
+        reset = np.zeros((self.n_slots,), bool)
+        reset[st.slot] = wipe_slot
         next_tok, self.cache = self._decode(self.params, self.cache,
-                                            tokens, positions, active)
+                                            tokens, positions, active, reset)
+        self.dispatches += 1
         st.position += 1
         return int(next_tok[st.slot])
 
     # ------------------------------------------------------------------ #
     def step(self) -> int:
         """One engine iteration; returns number of tokens produced."""
-        # 1. admission (prefill produces the first generated token)
+        # 1. admission (prefill produces the first generated token, which can
+        #    already satisfy the request — max_new_tokens=1 or immediate EOS)
         for slot in self.free_slots():
             if not self.waiting:
                 break
             req = self.waiting.pop(0)
             self._prefill_into_slot(req, slot)
+            st = self.active[slot]
+            if (len(st.generated) >= req.max_new_tokens
+                    or st.generated[-1] == req.eos_id):
+                st.done = True
+                st.finish_time = time.monotonic()
+                self.finished.append(st)
+                del self.active[slot]
 
         if not self.active:
             return 0
 
-        # 2. batched decode for all active slots
-        tokens = jnp.zeros((self.n_slots, 1), jnp.int32)
-        positions = self._pos_vector()
-        active = jnp.zeros((self.n_slots,), bool)
+        # 2. batched decode: assemble inputs host-side, ship once
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        positions = np.zeros((self.n_slots,), np.int32)
+        active = np.zeros((self.n_slots,), bool)
         live: List[RequestState] = []
         for slot, st in self.active.items():
-            tokens = tokens.at[slot, 0].set(st.generated[-1])
-            active = active.at[slot].set(True)
+            tokens[slot, 0] = st.generated[-1]
+            positions[slot] = st.position
+            active[slot] = True
             live.append(st)
         next_tok, self.cache = self._decode(self.params, self.cache,
-                                            tokens, positions, active)
+                                            tokens, positions, active,
+                                            np.zeros((self.n_slots,), bool))
+        self.dispatches += 1
+        next_np = np.asarray(next_tok)          # one device→host transfer
         produced = 0
         for st in live:
-            tok = int(next_tok[st.slot])
+            tok = int(next_np[st.slot])
             st.position += 1
             st.generated.append(tok)
             produced += 1
@@ -150,6 +280,8 @@ class Engine:
         return produced
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
-        while (self.waiting or self.active) and self.steps < max_steps:
+        taken = 0
+        while (self.waiting or self.active) and taken < max_steps:
             self.step()
+            taken += 1
         return self.finished

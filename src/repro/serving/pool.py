@@ -1,0 +1,165 @@
+"""Plan-driven engine pool: the physical half of the Autopoiesis data plane.
+
+A serving :class:`~repro.core.plan.Plan` assigns each model a set of
+:class:`~repro.core.plan.ReplicaGroup` s.  The pool materialises every group
+as a set of :class:`~repro.serving.engine.Engine` replicas and, on each new
+plan, *diffs* against the current one:
+
+  * unchanged groups keep their engines (and their warm jit caches) alive;
+  * changed/new groups are (re)built — cache re-allocation is the real
+    analogue of weight reloading, and its wall-clock is the measured
+    RECONFIG-COST;
+  * removed groups are drained first (outstanding requests finish; queued
+    requests are requeued onto surviving replicas of the same model) — the
+    continuous-execution constraint of §5.1.
+
+Requests are routed per model to the least-loaded replica (capacity-weighted
+shedding across groups).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.plan import Plan, ReplicaGroup
+from repro.serving.engine import Engine, Request, RequestState
+
+EngineFactory = Callable[[ReplicaGroup], Engine]
+
+
+@dataclass(frozen=True)
+class PoolDiff:
+    """Outcome of one reconfiguration, with measured wall-clock."""
+    built: Tuple[ReplicaGroup, ...]
+    reused: Tuple[ReplicaGroup, ...]
+    removed: Tuple[ReplicaGroup, ...]
+    drained_requests: int
+    wall_s: float
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.built or self.removed)
+
+
+class EnginePool:
+    """Replica engines keyed by their (hashable, frozen) ReplicaGroup."""
+
+    def __init__(self, factory: EngineFactory, max_replicas_per_group: int = 2,
+                 backlog_cap: int = 256):
+        self._factory = factory
+        self._max_replicas = max_replicas_per_group
+        self._backlog_cap = backlog_cap
+        self.backlog_dropped = 0         # oldest entries shed past the cap
+        self._replicas: Dict[ReplicaGroup, List[Engine]] = {}
+        self.plan: Optional[Plan] = None
+        self.finished: List[RequestState] = []
+        self.backlog: List[Tuple[str, Request]] = []   # (model, request)
+        self.reconfig_count = 0
+        self._retired_dispatches = 0     # counters of torn-down engines
+
+    # ------------------------------------------------------------------ #
+    def engines_for(self, model: str) -> List[Engine]:
+        return [e for g, engines in self._replicas.items()
+                for e in engines if g.model == model]
+
+    @property
+    def engines(self) -> List[Engine]:
+        return [e for engines in self._replicas.values() for e in engines]
+
+    def group_of(self, engine: Engine) -> Optional[ReplicaGroup]:
+        for g, engines in self._replicas.items():
+            if engine in engines:
+                return g
+        return None
+
+    # ------------------------------------------------------------------ #
+    def reconfigure(self, plan: Plan) -> PoolDiff:
+        """Apply a new plan; rebuild only what changed.  Measured wall-clock
+        covers drain + build (the reusable groups cost nothing)."""
+        t0 = time.monotonic()
+        new_groups = set(plan.groups)
+        old_groups = set(self._replicas)
+        removed = old_groups - new_groups
+        added = new_groups - old_groups
+        reused = old_groups & new_groups
+
+        # 1. drain shrinking groups: in-flight work finishes, queued work
+        #    is requeued on survivors of the same model (or backlogged)
+        drained = 0
+        requeue: List[Tuple[str, Request]] = []
+        for g in removed:
+            for eng in self._replicas[g]:
+                requeue.extend((g.model, r) for r in eng.waiting)
+                eng.waiting.clear()
+                before = len(eng.finished)
+                eng.run_until_drained()
+                done = eng.finished[before:]     # in-flight work only
+                drained += len(done)
+                self.finished.extend(done)
+                self._retired_dispatches += eng.dispatches
+            del self._replicas[g]
+
+        # 2. build new/changed groups
+        for g in added:
+            n = max(1, min(g.count, self._max_replicas))
+            self._replicas[g] = [self._factory(g) for _ in range(n)]
+
+        # 3. route requeued + backlogged requests onto the new topology
+        pending, self.backlog = requeue + self.backlog, []
+        for model, req in pending:
+            if not self.submit(model, req):
+                self.add_backlog(model, req)
+
+        self.plan = plan
+        self.reconfig_count += 1
+        return PoolDiff(tuple(sorted(added, key=repr)),
+                        tuple(sorted(reused, key=repr)),
+                        tuple(sorted(removed, key=repr)),
+                        drained, time.monotonic() - t0)
+
+    # ------------------------------------------------------------------ #
+    def add_backlog(self, model: str, req: Request) -> None:
+        """Hold a request no current replica can take; bounded — a model the
+        plans never cover must not grow memory without limit."""
+        self.backlog.append((model, req))
+        if len(self.backlog) > self._backlog_cap:
+            drop = len(self.backlog) - self._backlog_cap
+            del self.backlog[:drop]
+            self.backlog_dropped += drop
+
+    def submit(self, model: str, req: Request) -> bool:
+        """Route to the least-loaded replica serving ``model``.  Returns
+        False (and leaves the request to the caller) when no replica serves
+        the model under the current plan."""
+        engines = self.engines_for(model)
+        if not engines:
+            return False
+        target = min(engines, key=lambda e: (e.load / max(e.n_slots, 1)))
+        target.submit(req)
+        return True
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
+        """Step engines round-robin until all queues empty; returns newly
+        finished.  Interleaving keeps per-request timing (TTFT/TPOT) honest
+        across replicas — serial draining would charge replica B's requests
+        for replica A's entire runtime."""
+        engines = self.engines
+        before = {id(e): len(e.finished) for e in engines}
+        taken = 0
+        while (any(e.waiting or e.active for e in engines)
+               and taken < max_steps):
+            for eng in engines:
+                if eng.waiting or eng.active:
+                    eng.step()
+            taken += 1
+        done: List[RequestState] = []
+        for eng in engines:
+            done.extend(eng.finished[before[id(eng)]:])
+        self.finished.extend(done)
+        return done
+
+    @property
+    def total_dispatches(self) -> int:
+        return (self._retired_dispatches
+                + sum(e.dispatches for e in self.engines))

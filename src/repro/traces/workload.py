@@ -20,6 +20,9 @@ class TimestampObservation:
     time: float
     workloads: Tuple[Workload, ...]
     cluster: ClusterState
+    # measured backend feedback for the interval that served this timestamp
+    # (repro.core.execution_model.IntervalMetrics); None for synthetic traces
+    metrics: Optional[object] = None
 
 
 @dataclass(frozen=True)

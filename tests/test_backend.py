@@ -1,0 +1,136 @@
+"""Plan-driven backend: pool diffing, drain-on-shrink, sim parity."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.evaluator import Evaluator
+from repro.core.plan import HARDWARE, QWEN25_FAMILY, Plan, ReplicaGroup
+from repro.core.runtime import DataPlane, PolicyStage, SnapshotBuffer
+from repro.core.simulator import Simulator
+from repro.core.policy import seed_policies
+from repro.models import lm
+from repro.serving.backend import Backend, JaxBackend, SimBackend
+from repro.serving.engine import Engine, Request
+from repro.serving.pool import EnginePool
+from repro.traces import volatile_workload_trace
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+
+CFG = get_config("qwen2-1.5b").reduced()
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def make_pool(**kw):
+    return EnginePool(lambda g: Engine(CFG, PARAMS,
+                                       n_slots=max(1, min(g.batch, 3)),
+                                       max_seq_len=48), **kw)
+
+
+G_A = ReplicaGroup("m-a", "H100-80G", tp=1, batch=2, count=1)
+G_B = ReplicaGroup("m-b", "H100-80G", tp=1, batch=2, count=1)
+G_B2 = ReplicaGroup("m-b", "H100-80G", tp=1, batch=3, count=1)
+
+
+def test_plan_diff_reuses_unchanged_groups():
+    pool = make_pool()
+    d1 = pool.reconfigure(Plan((G_A, G_B)))
+    assert set(d1.built) == {G_A, G_B} and not d1.removed
+    engines_a = list(pool.engines_for("m-a"))
+    # change only m-b's group: m-a engines must be the SAME objects
+    d2 = pool.reconfigure(Plan((G_A, G_B2)))
+    assert d2.built == (G_B2,)
+    assert d2.removed == (G_B,)
+    assert d2.reused == (G_A,)
+    assert pool.engines_for("m-a") == engines_a
+    assert d2.wall_s >= 0.0
+
+
+def test_pool_drains_on_shrink():
+    pool = make_pool()
+    pool.reconfigure(Plan((G_A, G_B)))
+    for r in range(3):
+        assert pool.submit("m-b", Request(rid=r, prompt=[1 + r, 2],
+                                          max_new_tokens=3))
+    for eng in pool.engines_for("m-b"):
+        eng.step()                               # put requests in flight
+    in_flight = sum(len(e.active) for e in pool.engines_for("m-b"))
+    assert in_flight > 0
+    # shrink m-b away entirely: in-flight work must finish, not vanish;
+    # queued-but-unstarted work is requeued (here: backlogged, no survivor)
+    d = pool.reconfigure(Plan((G_A,)))
+    assert d.removed == (G_B,)
+    assert d.drained_requests == in_flight
+    assert len(pool.finished) == in_flight
+    assert all(len(s.generated) == 3 for s in pool.finished)
+    assert len(pool.backlog) == 3 - in_flight
+    # m-b no longer routable; request goes back to the caller
+    assert not pool.submit("m-b", Request(rid=9, prompt=[1], max_new_tokens=2))
+
+
+def test_pool_requeues_waiting_onto_survivors():
+    pool = make_pool()
+    pool.reconfigure(Plan((G_B, G_B2)))          # two groups serve m-b
+    target = pool._replicas[G_B][0]
+    for r in range(5):                            # overfill one replica's queue
+        target.submit(Request(rid=r, prompt=[1 + r], max_new_tokens=2))
+    d = pool.reconfigure(Plan((G_B2,)))          # drop the loaded group
+    # queued-but-unstarted requests moved to the surviving replica
+    survivors = pool.engines_for("m-b")
+    assert survivors and sum(e.load for e in survivors) + len(pool.finished) == 5
+    assert d.drained_requests <= 5
+
+
+def test_sim_backend_satisfies_protocol_and_matches_plain_accounting():
+    """DataPlane + SimBackend must reproduce the pre-backend T_total exactly."""
+    assert isinstance(SimBackend(SIM), Backend)
+    tr = volatile_workload_trace()
+    results = []
+    for backend in (None, SimBackend(SIM)):
+        ev = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0,
+                       sched_time_scale=0.0)      # deterministic t_sched
+        dp = DataPlane(ev, seed_policies()["greedy-reactive"],
+                       PolicyStage(), SnapshotBuffer(), backend=backend)
+        for obs in tr.observations:
+            dp.step(obs)
+        results.append(dp.acc.T_total)
+    assert results[0] == pytest.approx(results[1], rel=0, abs=0.0)
+
+
+def test_jax_backend_measures_reconfig_and_serves():
+    backend = JaxBackend(CFG, PARAMS, max_seq_len=48, slots_cap=2,
+                         max_replicas_per_group=1, requests_per_model=1,
+                         max_new_tokens=3)
+    assert isinstance(backend, Backend)
+    w = volatile_workload_trace().observations[0].workloads
+    plan = Plan(tuple(ReplicaGroup(x.model, "H100-80G", 1, 2, 1) for x in w))
+    rep = backend.apply_plan(plan, None)
+    assert rep.changed and rep.wall_s > 0.0
+    met = backend.serve_interval(list(w))
+    assert met.measured and met.requests == len(w)
+    assert met.tokens > 0 and met.tokens_per_s > 0
+    assert met.ttft_s > 0.0
+    # shrinking to one model rebuilds only what changed
+    rep2 = backend.apply_plan(Plan(plan.groups[:1]), None)
+    assert not rep2.built and len(rep2.removed) == len(w) - 1
+
+
+def test_measured_metrics_reach_snapshot_buffer_and_records():
+    backend = JaxBackend(CFG, PARAMS, max_seq_len=48, slots_cap=2,
+                         max_replicas_per_group=1, requests_per_model=1,
+                         max_new_tokens=3)
+    ev = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0)
+    buf = SnapshotBuffer()
+    dp = DataPlane(ev, seed_policies()["greedy-reactive"], PolicyStage(), buf,
+                   backend=backend)
+    tr = volatile_workload_trace()
+    out = dp.step(tr.observations[0])
+    assert out["reconfig_report"] is not None
+    assert out["metrics"] is not None and out["metrics"].measured
+    # first step is a cold start: plan built for real, wall-clock measured
+    assert out["reconfig_report"].wall_s > 0.0
+    rec = dp.acc.records[0]
+    assert rec.metrics is out["metrics"]
+    assert rec.metrics.reconfig_s == out["reconfig_report"].wall_s
+    snap = buf.snapshot(window=4)
+    assert snap.observations[-1].metrics is out["metrics"]

@@ -1,6 +1,8 @@
 """Eq. 13 interval accounting properties."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.execution_model import ExecutionAccumulator

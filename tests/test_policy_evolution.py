@@ -1,8 +1,10 @@
 """Policy representation, mutation, evolution, timeouts."""
 import random
 
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.evaluator import Evaluator

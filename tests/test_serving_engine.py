@@ -46,6 +46,99 @@ def test_engine_isolation_between_slots():
     assert run_solo() == run_busy()
 
 
+def test_max_new_tokens_one_yields_exactly_one_token():
+    """The prefill-produced token can already satisfy the request; the engine
+    must not spend a decode step (and a cache position) past the budget."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, n_slots=2, max_seq_len=48)
+    eng.submit(Request(rid=0, prompt=[3, 1, 4], max_new_tokens=1))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 1
+    assert done[0].position == 3          # no decode write happened
+
+
+@pytest.mark.parametrize("arch", ["mamba2-1.3b", "zamba2-7b", "qwen2-1.5b"])
+def test_slot_reuse_isolated_from_previous_occupant(arch):
+    """A reused slot must not leak the previous request's state — attention
+    KV is masked by kpos, but recurrent SSM/conv state is continued
+    unconditionally unless the slot is wiped at claim time."""
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, KEY)
+    probe = [5, 9, 11, 4]
+
+    fresh = Engine(cfg, params, n_slots=1, max_seq_len=48)
+    fresh.submit(Request(rid=0, prompt=list(probe), max_new_tokens=6))
+    want = fresh.run_until_drained()[0].generated
+
+    eng = Engine(cfg, params, n_slots=1, max_seq_len=48)
+    eng.submit(Request(rid=0, prompt=[7, 3, 8, 8, 2, 6], max_new_tokens=9))
+    eng.submit(Request(rid=1, prompt=list(probe), max_new_tokens=6))
+    fin = eng.run_until_drained()
+    got = next(f for f in fin if f.request.rid == 1).generated
+    assert got == want
+
+
+def test_long_prompt_truncated_at_submit():
+    """A prompt longer than the cache must not write past max_seq_len nor
+    trip the position guard early (previously silently corrupted the slot)."""
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, n_slots=2, max_seq_len=32)
+    long_prompt = [1 + i % 9 for i in range(100)]
+    eng.submit(Request(rid=0, prompt=list(long_prompt), max_new_tokens=4))
+    # truncation keeps the prompt tail and leaves room for full generation
+    assert len(eng.waiting[0].prompt) == eng.max_prompt_len(4) == 28
+    assert eng.waiting[0].prompt == long_prompt[-28:]
+    done = eng.run_until_drained()
+    assert len(done) == 1 and len(done[0].generated) == 4
+    assert done[0].position < eng.max_seq_len
+
+
+def test_long_prompt_rejected_when_truncation_disabled():
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = lm.init_params(cfg, KEY)
+    eng = Engine(cfg, params, n_slots=2, max_seq_len=32,
+                 truncate_long_prompts=False)
+    with pytest.raises(ValueError, match="exceeds engine limit"):
+        eng.submit(Request(rid=0, prompt=[1] * 40, max_new_tokens=4))
+    assert not eng.waiting
+
+
+def _prefill_both_modes(arch, prompt, max_new=5, max_seq_len=64):
+    cfg = get_config(arch).reduced()
+    params = lm.init_params(cfg, KEY)
+    out = {}
+    for chunked in (False, True):
+        e = Engine(cfg, params, n_slots=2, max_seq_len=max_seq_len,
+                   chunked_prefill=chunked)
+        e.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+        out[chunked] = e.run_until_drained()[0]
+    return out
+
+
+def test_chunked_prefill_matches_legacy_and_cuts_dispatches():
+    """Chunked prefill: identical greedy outputs, O(log P) dispatches."""
+    prompt = [1 + (3 * i) % 17 for i in range(37)]
+    d = _prefill_both_modes("qwen2-1.5b", prompt)
+    assert d[True].generated == d[False].generated
+    assert d[False].prefill_dispatches == len(prompt)
+    assert d[True].prefill_dispatches * 3 <= d[False].prefill_dispatches
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "gemma2-9b"])
+def test_chunked_prefill_exact_past_rolling_window(arch):
+    """Sliding-window rolling buffers: a multi-token chunk past the window
+    boundary would evict keys its own earlier queries need, so the engine
+    must fall back to per-token there — outputs stay exact (reduced window
+    is 16; the 37-token prompt crosses it)."""
+    prompt = [1 + (3 * i) % 17 for i in range(37)]
+    d = _prefill_both_modes(arch, prompt)
+    assert d[True].generated == d[False].generated
+    # still chunked up to the window, per-token beyond
+    assert d[True].prefill_dispatches < d[False].prefill_dispatches
+
+
 def test_engine_greedy_continuation_matches_model():
     """Engine greedy decode == argmax continuation of lm.forward."""
     import dataclasses

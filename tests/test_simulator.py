@@ -1,6 +1,8 @@
 """Simulator invariants — hypothesis property tests over Appendix B."""
-import hypothesis.strategies as st
 import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core.plan import (HARDWARE, QWEN25_FAMILY, ClusterState, Plan,

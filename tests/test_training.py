@@ -103,8 +103,8 @@ def test_compressed_allreduce_error_feedback():
     q, s = quantize_int8(x)
     err = jnp.abs(dequantize_int8(q, s) - x)
     assert float(err.max()) <= float(s) * 0.5 + 1e-6
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1,), ("data",))
     g = {"w": jnp.ones((1, 8, 8)) * 0.3}
     red, e = compressed_allreduce(g, mesh, "data")
     assert abs(float(red["w"].mean()) - 0.3) < 1e-2
