@@ -1,9 +1,12 @@
 """Serving-engine dispatch benchmark: chunked prefill + single-dispatch
-decode assembly vs the legacy per-token path.
+decode assembly vs the legacy per-token path, plus the Policy API v2
+request-domain comparison (FIFO vs evolved admission order under a bursty
+mixed-length workload).
 
 Reports, per mode: wall-clock, tok/s, total jitted dispatches, and
 dispatches *per request* — the acceptance metric is the per-request dispatch
-ratio (legacy O(prompt_len), chunked O(log prompt_len))."""
+ratio (legacy O(prompt_len), chunked O(log prompt_len)).  For the request
+sweep the acceptance metric is mean TTFT: sjf/slo-aware must beat FIFO."""
 from __future__ import annotations
 
 import time
@@ -12,7 +15,9 @@ import jax
 
 from benchmarks.common import emit, save_json
 from repro.configs import get_config
+from repro.core.policy import render_policy
 from repro.models import lm
+from repro.serving.backend import measured_interval_metrics
 from repro.serving.engine import Engine, Request
 
 
@@ -42,6 +47,73 @@ def _run(cfg, params, chunked: bool, n_requests: int, prompt_len: int,
                           if d.request.rid >= 0}}
 
 
+def _bursty_requests(cfg, n_requests: int):
+    """Mixed short/long burst, *longest submitted first* — the adversarial
+    arrival order for FIFO head-of-line blocking."""
+    reqs = []
+    for r in range(n_requests):
+        p_len = 48 if r % 2 == 0 else 4          # long/short interleave
+        max_new = 10 if r % 2 == 0 else 2
+        prompt = [1 + (r * 5 + j) % (cfg.vocab_size - 2) for j in range(p_len)]
+        reqs.append(Request(rid=r, prompt=prompt, max_new_tokens=max_new))
+    return sorted(reqs, key=lambda q: -len(q.prompt))
+
+
+_SWEEP_CACHE: dict = {}
+
+
+def request_policy_sweep(cfg=None, params=None, n_requests: int = 12,
+                         n_slots: int = 2, arch: str = "qwen2-1.5b") -> dict:
+    """Bursty workload, one engine per genome: FIFO baseline vs evolved
+    request-domain genomes (sjf / slo-aware) — mean + p95 TTFT.  Memoised:
+    serving_engine and policy_deepdive share one sweep per config when run
+    in the same ``benchmarks.run`` process; with ``cfg=None`` the model is
+    only built on a cache miss.  The key is always the arch id — cfg.name
+    carries a '-smoke' suffix after reduced() and would never match."""
+    key = (arch, n_requests, n_slots)
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    if cfg is None:
+        cfg = get_config(arch).reduced()
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    genomes = {
+        "fifo": None,                            # v1 path: no request policy
+        "sjf": {"priority_kind": "sjf"},
+        "slo-aware": {"priority_kind": "slo-aware", "slo_ttft_s": 2.0},
+        "sjf-preempt": {"priority_kind": "sjf", "preempt": True},
+    }
+    out = {}
+    for name, g in genomes.items():
+        rp = None
+        if g is not None:
+            full = dict(g, domains=["placement", "request"])
+            rp = render_policy(full, name=name).request_policy()
+        eng = Engine(cfg, params, n_slots=n_slots, max_seq_len=256,
+                     request_policy=rp)
+        # warm the jit caches over every chunk shape the burst can hit —
+        # 48 → 32+16, 15 → 8+4+2+1 — so the measured TTFTs reflect
+        # scheduling, not XLA compilation (preemption continuations of
+        # 48+k tokens decompose into these same warmed chunks)
+        eng.submit(Request(rid=-1, prompt=[1 + j % 9 for j in range(48)],
+                           max_new_tokens=2))
+        eng.submit(Request(rid=-2, prompt=[1 + j % 9 for j in range(15)],
+                           max_new_tokens=2))
+        eng.run_until_drained()
+        t0 = time.monotonic()
+        for req in _bursty_requests(cfg, n_requests):
+            eng.submit(Request(req.rid, list(req.prompt), req.max_new_tokens,
+                               req.eos_id, arrival_time=time.monotonic()))
+        done = [d for d in eng.run_until_drained() if d.request.rid >= 0]
+        met = measured_interval_metrics(done, time.monotonic() - t0)
+        out[name] = {
+            "mean_ttft_s": met.ttft_s, "p95_ttft_s": met.ttft_p95_s,
+            "wall_s": met.wall_s, "preemptions": eng.preemptions,
+            "completed": met.requests,
+        }
+    _SWEEP_CACHE[key] = out
+    return out
+
+
 def run(arch: str = "qwen2-1.5b", n_requests: int = 8, prompt_len: int = 48,
         max_new: int = 8) -> list:
     cfg = get_config(arch).reduced()
@@ -68,12 +140,25 @@ def run(arch: str = "qwen2-1.5b", n_requests: int = 8, prompt_len: int = 48,
          f"dispatch_reduction={ratio:.1f}x tok_s_speedup={speedup:.2f}x "
          f"(target ≥3x fewer dispatches)"),
     ]
+    # ---- Policy API v2: request-domain admission order under a burst ----
+    sweep = request_policy_sweep(cfg, params, arch=arch)
+    fifo = sweep["fifo"]["mean_ttft_s"]
+    for name, m in sweep.items():
+        rows.append(
+            (f"serving_engine/{arch}/request/{name}", m["wall_s"] * 1e6,
+             f"mean_ttft={m['mean_ttft_s'] * 1e3:.0f}ms "
+             f"p95_ttft={m['p95_ttft_s'] * 1e3:.0f}ms "
+             f"ttft_vs_fifo={m['mean_ttft_s'] / fifo:.2f}x "
+             f"preempt={m['preemptions']}"))
     save_json("serving_engine", {
         "arch": arch, "prompt_len": prompt_len, "n_requests": n_requests,
         "legacy": {k: v for k, v in legacy.items() if k != "generated"},
         "chunked": {k: v for k, v in chunked.items() if k != "generated"},
-        "dispatch_reduction": ratio, "tok_s_speedup": speedup})
+        "dispatch_reduction": ratio, "tok_s_speedup": speedup,
+        "request_policy_sweep": sweep})
     assert ratio >= 3.0, f"dispatch reduction {ratio:.1f}x below 3x target"
+    assert sweep["sjf"]["mean_ttft_s"] < fifo, \
+        "sjf request policy must beat FIFO mean TTFT under a bursty workload"
     return rows
 
 

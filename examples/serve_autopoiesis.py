@@ -29,16 +29,24 @@ def main():
                                max_replicas_per_group=1, requests_per_model=1)
 
     # ---------------- two-plane Autopoiesis runtime --------------------------
+    # the sjf-request seed is a v2 PolicyProgram: its request-domain hooks
+    # (admit/prioritize) are pushed to the engine pool and govern slot
+    # admission order instead of FIFO
     models = {m.name: m for m in QWEN25_FAMILY.values()}
     sim = Simulator(models, HARDWARE)
     evaluator = Evaluator(sim, models, HARDWARE)
-    ap = Autopoiesis(evaluator, seed_policies()["greedy-reactive"],
+    ap = Autopoiesis(evaluator, seed_policies()["sjf-request"],
                      EvolutionConfig(max_iterations=10, patience=10,
                                      evolution_timeout_s=45, seed=0),
                      window=8, evolve_every=3, backend=backend)
-    # blend measured reconfiguration wall-clock into the fitness accounting
+    # blend measured reconfiguration wall-clock AND request-level tail
+    # latency/backlog into the fitness accounting
     ap.data_plane.acc.measured_blend = 0.25
     ap.data_plane.acc.measured_scale = 50.0   # toy-engine seconds → cluster
+    ap.data_plane.acc.request_blend = 0.1
+    rp = backend.pool.request_policy
+    print(f"request policy installed on the pool: "
+          f"{rp.name if rp else None} (domains={ap.data_plane.policy.domains})")
 
     trace = volatile_workload_trace()
     print("running the self-evolving loop over the runtime trace…")
@@ -60,7 +68,10 @@ def main():
                      f"(sim estimate {rep.simulated_s:.1f}s)")
         if met is not None:
             line += (f"\n    [serve] {met.requests} req {met.tokens} tok "
-                     f"ttft={met.ttft_s * 1e3:.0f}ms tpot={met.tpot_s * 1e3:.0f}ms "
+                     f"ttft={met.ttft_s * 1e3:.0f}ms "
+                     f"(p50 {met.ttft_p50_s * 1e3:.0f} / "
+                     f"p95 {met.ttft_p95_s * 1e3:.0f}) "
+                     f"tpot={met.tpot_s * 1e3:.0f}ms "
                      f"{met.tokens_per_s:.1f} tok/s")
         print(line)
         if i > 0 and i % 3 == 0:

@@ -73,6 +73,11 @@ class Evaluator:
             policy.compile()
         except Exception as e:  # noqa: BLE001
             return EvalResult(INFEASIBLE_FITNESS, error=f"compile: {e}")
+        if not policy.implements("placement"):
+            # trace replay scores placement behaviour; request-only programs
+            # are valid hot-swap payloads but cannot be fitness-ranked here
+            return EvalResult(INFEASIBLE_FITNESS,
+                              error="no placement domain to evaluate")
 
         acc = ExecutionAccumulator(self.sim)
         plan: Optional[Plan] = None

@@ -38,7 +38,9 @@ class IntervalMetrics:
     tokens: int = 0
     wall_s: float = 0.0
     ttft_s: float = 0.0              # mean time-to-first-token
-    tpot_s: float = 0.0              # mean time-per-output-token
+    ttft_p50_s: float = 0.0          # median TTFT (tail behaviour ≠ mean)
+    ttft_p95_s: float = 0.0          # p95 TTFT
+    tpot_s: float = 0.0              # pooled time-per-output-token
     tokens_per_s: float = 0.0
     reconfig_s: float = 0.0          # measured engine-rebuild wall-clock
     simulated_serve_s: float = 0.0
@@ -54,13 +56,14 @@ class IntervalRecord:
     t_stale: float = 0.0
     t_reconfig: float = 0.0
     t_serve: float = 0.0
+    t_request: float = 0.0           # blended measured TTFT/backlog penalty
     serve_full: float = 0.0          # serve_time(plan_i, W_i) at full efficiency
     plan_changed: bool = False
     metrics: Optional[IntervalMetrics] = None   # measured backend feedback
 
     @property
     def total(self) -> float:
-        return self.t_stale + self.t_reconfig + self.t_serve
+        return self.t_stale + self.t_reconfig + self.t_serve + self.t_request
 
     @property
     def measured_reconfig_s(self) -> float:
@@ -79,6 +82,11 @@ class ExecutionAccumulator:
     # (reduced-model engines run orders of magnitude below production).
     measured_blend: float = 0.0
     measured_scale: float = 1.0
+    # Weight on the measured *request-level* quality of an interval: tail
+    # latency (p95 TTFT per served request) and backlog (requests no replica
+    # admitted, charged one interval wall-clock each).  0.0 (default) keeps
+    # fitness purely plan-level — the v1 accounting, bit-identical.
+    request_blend: float = 0.0
 
     def interval(self, idx: int, old_plan: Optional[Plan], new_plan: Plan,
                  workloads: List[Workload], t_sched: float,
@@ -87,6 +95,7 @@ class ExecutionAccumulator:
         serve_new = self.sim.serve_cost(new_plan, workloads)
         rec = IntervalRecord(idx, rescheduled, serve_full=serve_new,
                              metrics=measured)
+        rec.t_request = self._request_penalty(measured)
         if not rescheduled:
             rec.t_serve = serve_new
             self.records.append(rec)
@@ -124,6 +133,17 @@ class ExecutionAccumulator:
         self.records.append(rec)
         return rec
 
+    def _request_penalty(self, measured: Optional[IntervalMetrics]) -> float:
+        """Measured request-level term folded into the interval total: scaled
+        tail TTFT across served requests plus a wall-clock charge per
+        backlogged request."""
+        if (measured is None or not measured.measured
+                or self.request_blend <= 0.0):
+            return 0.0
+        tail = measured.ttft_p95_s * measured.requests
+        backlog = measured.backlogged * measured.wall_s
+        return self.request_blend * self.measured_scale * (tail + backlog)
+
     # aggregate (Table 1 artifact feedback fields)
     @property
     def T_total(self) -> float:
@@ -148,6 +168,10 @@ class ExecutionAccumulator:
     @property
     def sum_serve(self) -> float:
         return sum(r.t_serve for r in self.records)
+
+    @property
+    def sum_request(self) -> float:
+        return sum(r.t_request for r in self.records)
 
     @property
     def sum_measured_reconfig(self) -> float:

@@ -24,8 +24,10 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.policy import DEFAULT_GENOME, Policy, render_policy
 
 TRADEOFF_SYSTEM_PROMPT = """\
-You are evolving an LLM-serving policy: a pair of Python functions
-should_reschedule(ctx) and schedule(ctx).  The end-to-end objective is
+You are evolving an LLM-serving PolicyProgram (Policy API v2): a
+placement-domain pair should_reschedule(ctx)/schedule(ctx), optionally
+joined by request-domain hooks admit(rctx)/prioritize(rctx) that replace
+the engines' FIFO admission order.  The end-to-end objective is
 
   T_total = t_sched(1) + t_serve(1) + sum_i [ t_stale(i) + t_reconfig(i) + t_serve(i) ]
 
@@ -87,6 +89,11 @@ _NUMERIC_STEPS = {
     "reconfig_penalty": (0.0, 8.0, 1.7),
     "migration_keep_threshold": (0.0, 4.0, 1.7),
     "min_interval": (1, 5, 2.0),
+    # request domain.  admit_load_cap's floor is 1.0 (= outstanding ≤ slots,
+    # the strictest sane throttle): bumping the 0.0 "unlimited" default
+    # enters at the floor instead of a degenerate near-zero cap
+    "admit_load_cap": (1.0, 8.0, 1.5),
+    "slo_ttft_s": (0.1, 10.0, 1.6),
 }
 _CATEGORICAL = {
     "scheduler": ["greedy", "bnb", "hybrid"],
@@ -97,7 +104,13 @@ _CATEGORICAL = {
     "heterogeneity_aware": [True, False],
     "weighted_obj": [False, True],
     "allow_split": [False, True],
+    "priority_kind": ["fifo", "sjf", "slo-aware"],   # request domain
+    "preempt": [False, True],
 }
+# touching any of these implicitly turns the request domain on — a mutation
+# that sets priority_kind=sjf on a placement-only parent must actually
+# change the rendered program, not silently no-op
+_REQUEST_KEYS = ("priority_kind", "admit_load_cap", "preempt", "slo_ttft_s")
 
 
 def _bump(rng: random.Random, val: float, lo: float, hi: float,
@@ -142,7 +155,12 @@ class StructuredMutator(Mutator):
                     ("batch_scheme", "pow2"), ("shift_threshold", +1),
                     ("allow_split", False),
                 ])
-            else:  # serve-dominated: buy plan quality / freshness
+            else:  # serve-dominated: buy plan quality / freshness.  Request
+                   # knobs are deliberately absent here: the offline
+                   # trace-replay evaluator cannot rank them (request_blend
+                   # only acts on measured backend metrics), so directed
+                   # exploitation would burn iterations on fitness-neutral
+                   # moves — exploration and crossover still reach them
                 move = rng.choice([
                     ("time_budget", +1), ("scheduler", rng.choice(["bnb", "hybrid"])),
                     ("batch_scheme", rng.choice(["sweet", "exhaustive"])),
@@ -156,6 +174,8 @@ class StructuredMutator(Mutator):
                 g[key] = _bump(rng, float(g[key]), lo, hi, step, d)
             else:
                 g[key] = d
+            if key in _REQUEST_KEYS:
+                g["domains"] = _with_request_domain(g)
         else:
             # exploration: perturb 1–2 random knobs
             for _ in range(rng.randint(1, 2)):
@@ -166,13 +186,30 @@ class StructuredMutator(Mutator):
                                    rng.choice([-1, 1]))
                 else:
                     g[key] = rng.choice(_CATEGORICAL[key])
+                if key in _REQUEST_KEYS:
+                    g["domains"] = _with_request_domain(g)
 
         # occasional crossover with a population elite
         elites = population_context.get("elite_genomes", [])
         if elites and rng.random() < 0.25:
             other = rng.choice(elites)
             for key in rng.sample(list(other), k=max(1, len(other) // 3)):
-                if key in DEFAULT_GENOME:
+                # never copy "domains" wholesale: inheriting a placement-only
+                # list would silently strip the child's request domain while
+                # its request knobs remain in the genome, inert
+                if key in DEFAULT_GENOME and key != "domains":
                     g[key] = other[key]
+                    if (key in _REQUEST_KEYS
+                            and "request" in other.get("domains", ())):
+                        # inheriting a request knob from a request-domain
+                        # elite must carry the domain, or the knob is inert
+                        g["domains"] = _with_request_domain(g)
 
         return render_policy(g, name=f"{parent.name}*")
+
+
+def _with_request_domain(g: Dict[str, Any]) -> List[str]:
+    domains = list(g.get("domains", ["placement"]))
+    if "request" not in domains:
+        domains.append("request")
+    return domains

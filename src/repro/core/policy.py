@@ -1,22 +1,42 @@
-"""Policy-as-source-code (§5.1, §6.2).
+"""Policy-as-source-code (§5.1, §6.2) — Policy API v2: multi-domain programs.
 
-A serving policy is *source code* defining the co-evolved pair
+A serving policy is *source code* compiled via ``exec`` in a restricted
+namespace.  Since v2 a policy source is a **PolicyProgram** that declares
+which *domains* it implements:
 
-    should_reschedule(ctx) -> bool
-    schedule(ctx)          -> Plan
+* ``placement`` — the original co-evolved pair
 
-compiled via ``exec`` in a restricted namespace.  Policies carry a GENOME
-header (JSON on the first line) — the structured parameter summary that the
-offline StructuredMutator mutates and re-renders; the online LLMMutator can
-instead rewrite the source directly (diff-based, AlphaEvolve-style).  Hot-swap
-(§6.2) is therefore a pure code replacement: the data plane re-execs the
-staged source at its next monitoring step.
+      should_reschedule(ctx) -> bool
+      schedule(ctx)          -> Plan
+
+  governing when and how the cluster-level serving plan changes.
+
+* ``request`` — request-level scheduling hooks the serving engines consult
+  instead of hardcoded FIFO slot-filling / load-blind routing
+
+      admit(rctx)      -> bool    # may this request start (or route) now?
+      prioritize(rctx) -> float   # admission order: lower score runs first
+
+  where ``rctx`` is a :class:`repro.serving.engine.RequestCtx` typed view
+  over queue depth, slot load and request age.
+
+Domains are declared either through the GENOME header's ``domains`` list or
+a module-level ``POLICY_DOMAINS`` tuple; raw v1 sources carry neither and are
+loaded through the back-compat adapter: the domains are *inferred* from which
+hook functions the source defines, so every v1 ``(should_reschedule,
+schedule)`` policy loads unmodified as a placement-only program.
+
+Policies carry a GENOME header (JSON on the first line) — the structured
+parameter summary that the offline StructuredMutator mutates and re-renders;
+the online LLMMutator can instead rewrite the source directly (diff-based,
+AlphaEvolve-style).  Hot-swap (§6.2) is therefore a pure code replacement:
+the data plane re-execs the staged source at its next monitoring step and
+pushes the program's request-domain hooks to the serving backend.
 """
 from __future__ import annotations
 
 import json
 import math
-import textwrap
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -25,8 +45,17 @@ from repro.core.plan import Ctx, Plan, ReplicaGroup
 
 GENOME_PREFIX = "# GENOME: "
 
+POLICY_API_VERSION = 2
+
+# domain registry: domain name -> required hook functions
+DOMAINS: Dict[str, Tuple[str, ...]] = {
+    "placement": ("should_reschedule", "schedule"),
+    "request": ("admit", "prioritize"),
+}
+
 # default genome = paper's "reactive baseline" starting point
 DEFAULT_GENOME: Dict[str, Any] = {
+    "domains": ["placement"],       # which DOMAINS the program implements
     "scheduler": "greedy",          # greedy | bnb | hybrid
     "time_budget": 2.0,             # B&B anytime deadline (thoroughness)
     "batch_scheme": "pow2",         # pow2 | sweet | exhaustive
@@ -40,6 +69,11 @@ DEFAULT_GENOME: Dict[str, Any] = {
     "trigger_kind": "always",       # always | threshold | periodic | hybrid
     "shift_threshold": 0.3,         # workload_shift() trigger level
     "min_interval": 1,              # periodic trigger / cooldown
+    # --- request domain (consulted only when "request" in domains) ---
+    "priority_kind": "fifo",        # fifo | sjf | slo-aware
+    "admit_load_cap": 0.0,          # 0 = unlimited; else outstanding ≤ cap×slots
+    "preempt": False,               # evict the worst-priority running request
+    "slo_ttft_s": 2.0,              # slo-aware target for slack computation
 }
 
 
@@ -59,12 +93,21 @@ _SAFE_BUILTINS = {
 }
 
 
-def policy_namespace() -> Dict[str, Any]:
-    """Names available to policy code (the paper exposes the simulator and
-    scheduling building blocks to generated programs)."""
-    return {
+def policy_namespace(domain: Optional[str] = None) -> Dict[str, Any]:
+    """Names available to policy code in ``domain`` (``None`` = the union of
+    every domain — what :meth:`PolicyProgram.compile` executes sources in).
+
+    The paper exposes the simulator and scheduling building blocks to
+    generated *placement* programs; *request* programs run on the serving
+    hot path and see only arithmetic — they must stay cheap and effect-free.
+    """
+    base: Dict[str, Any] = {
         "__builtins__": dict(_SAFE_BUILTINS),
         "math": math,
+    }
+    if domain == "request":
+        return base
+    base.update({
         "schedulers": schedulers,
         "Plan": Plan,
         "ReplicaGroup": ReplicaGroup,
@@ -72,38 +115,139 @@ def policy_namespace() -> Dict[str, Any]:
         "bnb_schedule": schedulers.bnb_schedule,
         "full_migration": schedulers.full_migration,
         "minimal_migration": schedulers.minimal_migration,
-    }
+    })
+    return base
+
+
+class PolicyDomainError(RuntimeError):
+    """A hook from a domain the program does not implement was invoked."""
 
 
 @dataclass
-class Policy:
-    """Compiled policy: source of record is the code string."""
+class RequestPolicy:
+    """Compiled request-domain hooks, handed to the serving backend.
+
+    Pure callables over a ``RequestCtx`` duck-typed view — this object must
+    never import serving types, so the core policy layer stays free of
+    serving imports.  ``preempt`` is a genome-derived flag the engine
+    consults before evicting a running request for a waiting one.
+    """
+    admit_fn: Callable[[Any], bool]
+    prioritize_fn: Callable[[Any], float]
+    preempt: bool = False
+    name: str = "anon"
+
+    def admit(self, rctx: Any) -> bool:
+        return bool(self.admit_fn(rctx))
+
+    def prioritize(self, rctx: Any) -> float:
+        return float(self.prioritize_fn(rctx))
+
+
+@dataclass
+class PolicyProgram:
+    """Compiled multi-domain policy: source of record is the code string."""
     source: str
     genome: Optional[Dict[str, Any]] = None
     name: str = "anon"
-    _fns: Optional[Tuple[Callable, Callable]] = field(default=None, repr=False)
+    domains: Tuple[str, ...] = ()
+    api_version: int = 0             # set at compile: 2 declared, 1 inferred
+    _hooks: Dict[str, Tuple[Callable, ...]] = field(default_factory=dict,
+                                                    repr=False)
 
-    def compile(self) -> "Policy":
+    def compile(self) -> "PolicyProgram":
         ns = policy_namespace()
         exec(compile(self.source, f"<policy:{self.name}>", "exec"), ns)  # noqa: S102
-        if "should_reschedule" not in ns or "schedule" not in ns:
-            raise ValueError("policy source must define should_reschedule and schedule")
-        self._fns = (ns["should_reschedule"], ns["schedule"])
         if self.genome is None:
             self.genome = parse_genome(self.source)
+
+        declared = ns.get("POLICY_DOMAINS")
+        if declared is None and self.genome is not None:
+            declared = self.genome.get("domains")
+        if declared is not None:
+            self.api_version = POLICY_API_VERSION
+            declared = tuple(declared)
+            unknown = [d for d in declared if d not in DOMAINS]
+            if unknown:
+                raise ValueError(f"policy declares unknown domains {unknown}; "
+                                 f"known: {sorted(DOMAINS)}")
+        else:
+            # v1 back-compat adapter: infer domains from the hooks defined
+            self.api_version = 1
+            declared = tuple(d for d, fns in DOMAINS.items()
+                             if all(f in ns and callable(ns[f]) for f in fns))
+        if not declared:
+            raise ValueError(
+                "policy source implements no known domain — it must define "
+                "should_reschedule+schedule (placement) and/or "
+                "admit+prioritize (request)")
+
+        # per-domain namespaces: each domain's hooks close over exactly that
+        # domain's restricted namespace, so a request hook physically cannot
+        # reach the scheduler/simulator machinery from the serving hot path
+        # (it raises NameError there, which the engine treats as advisory).
+        # The placement namespace equals the union one, so its hooks come
+        # from the detection exec; only restricted domains re-exec.
+        hooks: Dict[str, Tuple[Callable, ...]] = {}
+        for d in declared:
+            missing = [f for f in DOMAINS[d]
+                       if f not in ns or not callable(ns[f])]
+            if missing:
+                raise ValueError(f"policy declares domain '{d}' but does not "
+                                 f"define {missing}")
+            if d == "placement":
+                dns = ns
+            else:
+                dns = policy_namespace(d)
+                exec(compile(self.source, f"<policy:{self.name}:{d}>",  # noqa: S102
+                             "exec"), dns)
+            hooks[d] = tuple(dns[f] for f in DOMAINS[d])
+        self.domains = tuple(d for d in DOMAINS if d in hooks)  # stable order
+        self._hooks = hooks
         return self
 
+    # ------------------------------------------------------------------ #
+    def implements(self, domain: str) -> bool:
+        if not self._hooks:
+            self.compile()
+        return domain in self._hooks
+
+    def _domain_hooks(self, domain: str) -> Tuple[Callable, ...]:
+        if not self._hooks:
+            self.compile()
+        try:
+            return self._hooks[domain]
+        except KeyError:
+            raise PolicyDomainError(
+                f"policy '{self.name}' implements {self.domains}, "
+                f"not '{domain}'") from None
+
+    # --- placement domain --------------------------------------------- #
     @property
     def fns(self) -> Tuple[Callable, Callable]:
-        if self._fns is None:
-            self.compile()
-        return self._fns
+        """(should_reschedule, schedule) — v1-era accessor, kept stable."""
+        return self._domain_hooks("placement")
 
     def should_reschedule(self, ctx: Ctx) -> bool:
-        return bool(self.fns[0](ctx))
+        return bool(self._domain_hooks("placement")[0](ctx))
 
     def schedule(self, ctx: Ctx) -> Plan:
-        return self.fns[1](ctx)
+        return self._domain_hooks("placement")[1](ctx)
+
+    # --- request domain ----------------------------------------------- #
+    def request_policy(self) -> Optional[RequestPolicy]:
+        """Compiled request-domain hooks, or None for placement-only
+        programs (backends then fall back to FIFO admission)."""
+        if not self.implements("request"):
+            return None
+        admit_fn, prioritize_fn = self._hooks["request"]
+        preempt = bool((self.genome or {}).get("preempt", False))
+        return RequestPolicy(admit_fn, prioritize_fn, preempt=preempt,
+                             name=self.name)
+
+
+# v1 name: every existing call-site (and raw v1 source) keeps working
+Policy = PolicyProgram
 
 
 def parse_genome(source: str) -> Optional[Dict[str, Any]]:
@@ -213,21 +357,52 @@ def schedule(ctx):
     return best if best is not None else new
 '''
 
+# appended verbatim (after placement formatting) when the genome declares the
+# request domain; ``r`` is the engine's RequestCtx view — lower score first
+_REQUEST_SECTION = '''
 
-def render_policy(genome: Dict[str, Any], name: str = "rendered") -> Policy:
+# --- request domain (Policy API v2): admission + priority over RequestCtx ---
+
+def admit(r):
+    cap = G["admit_load_cap"]
+    if cap > 0 and (r.active + r.queue_depth) >= cap * max(r.n_slots, 1):
+        return False                     # shed load: hold for a later step
+    return True
+
+
+def prioritize(r):
+    kind = G["priority_kind"]
+    if kind == "sjf":
+        return float(r.prompt_len + r.max_new_tokens)
+    if kind == "slo-aware":
+        # requests past the TTFT target sort first (most-late first, always
+        # negative); on-time requests run shortest-job-first (positive token
+        # counts) — SJF throughput with a starvation guard, which orders
+        # differently from both fifo and pure sjf
+        slack = G["slo_ttft_s"] - r.age_s
+        if slack <= 0.0:
+            return float(slack)
+        return float(r.prompt_len + r.max_new_tokens)
+    return -r.age_s                      # fifo: oldest waiting first
+'''
+
+
+def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgram:
     g = dict(DEFAULT_GENOME)
     g.update(genome)
     src = _TEMPLATE.format(
         genome_line=GENOME_PREFIX + json.dumps(g, sort_keys=True),
         genome_repr=repr(g),            # Python-literal dict (json has true/false)
     )
-    return Policy(source=src, genome=g, name=name)
+    if "request" in g.get("domains", ()):
+        src += _REQUEST_SECTION
+    return PolicyProgram(source=src, genome=g, name=name)
 
 
 # --------------------------------------------------------------------------- #
 # seed policies (§5.4: diverse starting vocabulary of design patterns)
 # --------------------------------------------------------------------------- #
-def seed_policies() -> Dict[str, Policy]:
+def seed_policies() -> Dict[str, PolicyProgram]:
     seeds = {
         "greedy-reactive": {"scheduler": "greedy", "trigger_kind": "always"},
         "ilp-thorough": {"scheduler": "bnb", "time_budget": 30.0,
@@ -243,5 +418,24 @@ def seed_policies() -> Dict[str, Policy]:
                                   "shift_threshold": 0.25, "min_interval": 1,
                                   "reconfig_penalty": 2.0,
                                   "migration_keep_threshold": 1.0},
+        # migration extremes (§8.2 baselines) — starting vocabulary for
+        # elastic-cluster regimes, not just comparison targets
+        "full-migration": {"scheduler": "bnb", "time_budget": 5.0,
+                           "batch_scheme": "sweet", "allow_split": True,
+                           "trigger_kind": "always"},
+        "minimal-migration": {"scheduler": "greedy",
+                              "trigger_kind": "threshold",
+                              "shift_threshold": 9.9,
+                              "migration_keep_threshold": 4.0,
+                              "reconfig_penalty": 8.0},
+        # request-domain variants: same placement behaviour as the reactive
+        # baseline, but the engines' admission order becomes evolvable
+        "sjf-request": {"scheduler": "greedy", "trigger_kind": "always",
+                        "domains": ["placement", "request"],
+                        "priority_kind": "sjf"},
+        "slo-guard": {"scheduler": "greedy", "trigger_kind": "always",
+                      "domains": ["placement", "request"],
+                      "priority_kind": "slo-aware", "slo_ttft_s": 1.0,
+                      "admit_load_cap": 4.0},
     }
     return {k: render_policy(v, name=k) for k, v in seeds.items()}

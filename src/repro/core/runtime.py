@@ -111,9 +111,24 @@ class DataPlane:
         if self.acc is None:
             self.acc = ExecutionAccumulator(self.evaluator.sim)
         self.policy.compile()
+        self._push_request_policy(self.policy)
+
+    def _push_request_policy(self, policy: Policy) -> None:
+        """Hand the program's request-domain hooks to the backend (None for
+        placement-only programs restores the backend's FIFO default)."""
+        if self.backend is not None and hasattr(self.backend,
+                                                "set_request_policy"):
+            self.backend.set_request_policy(policy.request_policy())
 
     def maybe_hot_swap(self) -> bool:
-        """Load staged policy code at a monitoring-step boundary (§6.2)."""
+        """Load staged policy code at a monitoring-step boundary (§6.2).
+
+        Policy API v2: the staged source is a multi-domain PolicyProgram.
+        Its placement hooks (if implemented) replace the live policy; its
+        request hooks are pushed to the serving backend.  A staged program
+        that compiles but implements no known domain is rejected exactly
+        like one that fails to compile — serving is never disrupted.
+        """
         staged = self.stage.poll(self._seen_version)
         if staged is None:
             return False
@@ -124,7 +139,11 @@ class DataPlane:
         except Exception:  # noqa: BLE001 — bad staged code never disrupts serving
             self._seen_version = version
             return False
-        self.policy = new_policy
+        if new_policy.implements("placement"):
+            self.policy = new_policy
+        # a request-only program rides alongside the live placement policy;
+        # a placement-only one resets engines to their FIFO default
+        self._push_request_policy(new_policy)
         self._seen_version = version
         self.swap_count += 1
         return True

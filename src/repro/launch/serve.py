@@ -32,12 +32,23 @@ def main() -> int:
     ap.add_argument("--resize", action="store_true",
                     help="apply a second plan (halved batch) and report the "
                          "measured reconfiguration wall-clock")
+    ap.add_argument("--priority", default="fifo",
+                    choices=["fifo", "sjf", "slo-aware"],
+                    help="request-domain admission order (Policy API v2); "
+                         "fifo keeps the v1 behaviour")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     backend = JaxBackend(cfg, params, max_seq_len=128, slots_cap=args.slots,
                          max_replicas_per_group=args.replicas)
+    if args.priority != "fifo":
+        from repro.core.policy import render_policy
+        backend.set_request_policy(render_policy(
+            {"domains": ["placement", "request"],
+             "priority_kind": args.priority},
+            name=args.priority).request_policy())
+        print(f"request policy: {args.priority} admission order")
     model = cfg.name
     plan = Plan((ReplicaGroup(model, "H100-80G", tp=1, batch=args.slots,
                               count=args.replicas),))

@@ -2,6 +2,8 @@
 plan-driven engine pools, and the Backend protocol the runtime applies
 serving plans through."""
 from repro.serving.backend import (Backend, JaxBackend, ReconfigReport,  # noqa: F401
-                                   SimBackend, make_jax_backend)
-from repro.serving.engine import Engine, Request, RequestState  # noqa: F401
+                                   SimBackend, make_jax_backend,
+                                   measured_interval_metrics)
+from repro.serving.engine import (Engine, Request, RequestCtx,  # noqa: F401
+                                  RequestState)
 from repro.serving.pool import EnginePool, PoolDiff  # noqa: F401

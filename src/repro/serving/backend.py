@@ -15,6 +15,7 @@ Both satisfy the same two-method protocol, so DataPlane.step is agnostic.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional, Protocol, Sequence, Tuple, runtime_checkable
@@ -24,10 +25,57 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.core.execution_model import IntervalMetrics
 from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
+from repro.core.policy import RequestPolicy
 from repro.core.simulator import Simulator
 from repro.models import lm
 from repro.serving.engine import Engine, Request
 from repro.serving.pool import EnginePool, PoolDiff
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (rank ⌈q·n⌉) over a sorted sample (0 if
+    empty) — e.g. the p50 of an even-sized sample is the lower middle
+    element, and p95 of 20 values is the 19th, not the maximum."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(max(math.ceil(q * len(sorted_vals)) - 1, 0),
+              len(sorted_vals) - 1)
+    return float(sorted_vals[idx])
+
+
+def measured_interval_metrics(done: Sequence, wall: float,
+                              backlogged: int = 0) -> IntervalMetrics:
+    """Aggregate finished RequestStates into measured interval feedback.
+
+    TTFT is reported as mean *and* p50/p95 (tail behaviour is what the
+    slo-aware request genome optimises).  TPOT is pooled — Σ decode
+    wall-clock / Σ post-first tokens across ALL completions — so
+    single-token completions enter the accounting consistently: they
+    contribute zero decode tokens and zero decode time, where the previous
+    mean-of-per-request-ratios silently dropped them from the denominator
+    while their tokens still counted in throughput."""
+    def ngen(d) -> int:
+        # tokens produced before a preemption live in the continuation's
+        # prompt, not its ``generated`` list — count them as output
+        return len(d.generated) + getattr(d, "prior_generated", 0)
+
+    ttfts = sorted(d.first_token_time - d.request.arrival_time
+                   for d in done if d.first_token_time is not None)
+    decode_s = sum(d.finish_time - d.first_token_time for d in done
+                   if d.finish_time is not None
+                   and d.first_token_time is not None
+                   and ngen(d) > 1)
+    decode_tokens = sum(max(ngen(d) - 1, 0) for d in done)
+    tokens = sum(ngen(d) for d in done)
+    return IntervalMetrics(
+        requests=len(done), tokens=tokens, wall_s=wall,
+        ttft_s=sum(ttfts) / len(ttfts) if ttfts else 0.0,
+        ttft_p50_s=_percentile(ttfts, 0.50),
+        ttft_p95_s=_percentile(ttfts, 0.95),
+        tpot_s=decode_s / decode_tokens if decode_tokens > 0 else 0.0,
+        tokens_per_s=tokens / wall if wall > 0 else 0.0,
+        backlogged=backlogged,
+        measured=True)   # reconfig_s merged in by DataPlane.step
 
 
 @dataclass(frozen=True)
@@ -57,6 +105,11 @@ class Backend(Protocol):
         """Serve one monitoring interval's workloads under the current plan."""
         ...
 
+    def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
+        """Install (or clear, with None) the request-domain scheduling hooks
+        of the live PolicyProgram — Policy API v2's second evolvable surface."""
+        ...
+
 
 # --------------------------------------------------------------------------- #
 # simulator-backed (closes the loop without hardware)
@@ -69,6 +122,13 @@ class SimBackend:
     sim: Simulator
     plan: Optional[Plan] = None
     applied: List[Plan] = field(default_factory=list)
+    request_policy: Optional[RequestPolicy] = None
+
+    def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
+        # the roofline simulator has no per-request queue to reorder; the
+        # hooks are recorded so tests (and future sim upgrades) can see what
+        # the control plane pushed
+        self.request_policy = rp
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = self.sim.reconfig_cost(self.plan, plan)
@@ -125,6 +185,9 @@ class JaxBackend:
                       max_seq_len=self.max_seq_len)
 
     # ------------------------------------------------------------------ #
+    def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
+        self.pool.set_request_policy(rp)
+
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = 0.0
         if ctx is not None and ctx.simulator is not None:
@@ -138,7 +201,6 @@ class JaxBackend:
     def serve_interval(self, workloads: Sequence[Workload]) -> IntervalMetrics:
         """Serve a scaled-down burst per workload model and measure."""
         t0 = time.monotonic()
-        backlogged = 0
         for w in workloads:
             # prompt/decode lengths scaled into the reduced engine's window
             p_len = max(2, min(w.prefill_len // 64, self.max_seq_len // 3))
@@ -151,27 +213,15 @@ class JaxBackend:
                               max_new_tokens=d_len,
                               arrival_time=time.monotonic())
                 if not self.pool.submit(w.model, req):
-                    # no replica serves this model under the current plan:
-                    # hold the request until a covering plan arrives rather
-                    # than dropping it silently
+                    # no replica serves this model (or the admit gate is
+                    # throttling): hold the request rather than dropping it
                     self.pool.add_backlog(w.model, req)
-                    backlogged += 1
         done = self.pool.run_until_drained()
         wall = time.monotonic() - t0
-        ttfts = [d.first_token_time - d.request.arrival_time
-                 for d in done if d.first_token_time is not None]
-        tpots = [(d.finish_time - d.first_token_time) / (len(d.generated) - 1)
-                 for d in done
-                 if d.finish_time is not None and d.first_token_time is not None
-                 and len(d.generated) > 1]
-        tokens = sum(len(d.generated) for d in done)
-        return IntervalMetrics(
-            requests=len(done), tokens=tokens, wall_s=wall,
-            ttft_s=sum(ttfts) / len(ttfts) if ttfts else 0.0,
-            tpot_s=sum(tpots) / len(tpots) if tpots else 0.0,
-            tokens_per_s=tokens / wall if wall > 0 else 0.0,
-            backlogged=backlogged,
-            measured=True)   # reconfig_s merged in by DataPlane.step
+        # backlogged = requests STILL unserved after the drain; a request the
+        # admit gate merely deferred and then served this interval is not
+        # penalised twice (its queueing delay already shows up in TTFT)
+        return measured_interval_metrics(done, wall, len(self.pool.backlog))
 
 
 def make_jax_backend(arch: str = "qwen2-1.5b", seed: int = 0,

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.policy import RequestPolicy
 from repro.models import lm
 
 EOS_DEFAULT = -1        # disabled unless the tokenizer defines one
@@ -47,6 +48,25 @@ class Request:
     arrival_time: float = 0.0
 
 
+@dataclass(frozen=True)
+class RequestCtx:
+    """Typed view of one request against the engine's current load — the
+    argument the request-domain policy hooks (``admit``/``prioritize``)
+    receive.  Kept to plain scalars so evolved code stays cheap and cannot
+    reach mutable engine state from the serving hot path."""
+    rid: int
+    prompt_len: int
+    max_new_tokens: int
+    age_s: float                     # now − arrival_time (queueing delay)
+    queue_depth: int                 # requests waiting on this engine
+    active: int                      # requests currently decoding
+    n_slots: int
+
+    @property
+    def slot_load(self) -> float:
+        return self.active / max(self.n_slots, 1)
+
+
 @dataclass
 class RequestState:
     request: Request
@@ -57,19 +77,28 @@ class RequestState:
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     prefill_dispatches: int = 0
+    prior_generated: int = 0     # tokens produced before a preemption
+                                 # (folded into the continuation's prompt)
 
 
 class Engine:
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_seq_len: int = 256, greedy: bool = True,
                  chunked_prefill: bool = True, max_prefill_chunk: int = 64,
-                 truncate_long_prompts: bool = True):
+                 truncate_long_prompts: bool = True,
+                 request_policy: Optional[RequestPolicy] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
         self.chunked_prefill = chunked_prefill
         self.truncate_long_prompts = truncate_long_prompts
+        self.request_policy = request_policy
+        self.policy_errors = 0       # request-hook failures (hooks are advisory)
+        self.preemptions = 0
+        # rid -> (original first_token_time, tokens generated pre-preemption):
+        # keeps TTFT/token accounting honest across preempt-and-recompute
+        self._preempt_carry: Dict[int, Tuple[float, int]] = {}
         cache_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.cache = lm.init_cache(cfg, n_slots, max_seq_len, dtype=cache_dtype)
         self.waiting: List[Request] = []
@@ -156,6 +185,91 @@ class Engine:
         return len(self.waiting) + len(self.active)
 
     # ------------------------------------------------------------------ #
+    # request-domain policy dispatch (Policy API v2)
+    # ------------------------------------------------------------------ #
+    def request_ctx_for(self, req: Request,
+                        now: Optional[float] = None) -> RequestCtx:
+        now = time.monotonic() if now is None else now
+        return RequestCtx(rid=req.rid, prompt_len=len(req.prompt),
+                          max_new_tokens=req.max_new_tokens,
+                          age_s=max(now - req.arrival_time, 0.0),
+                          queue_depth=len(self.waiting),
+                          active=len(self.active), n_slots=self.n_slots)
+
+    def _score(self, req: Request, now: float) -> float:
+        """Priority score (lower runs first).  The ``admit`` gate is NOT
+        consulted here: work in ``waiting`` is already accepted, and a
+        load-cap admit is self-referential at slot admission (the candidate
+        counts itself in queue_depth, so deferring can never satisfy the
+        cap) — ``admit`` gates ingress at EnginePool.submit instead.  Hook
+        failures are advisory, never fatal: the request falls back to
+        FIFO-neutral priority and serving continues."""
+        rp = self.request_policy
+        if rp is None:
+            return 0.0
+        try:
+            return rp.prioritize(self.request_ctx_for(req, now))
+        except Exception:  # noqa: BLE001 — evolved code must not kill serving
+            self.policy_errors += 1
+            return 0.0
+
+    def _select_admissions(self, n: int) -> List[Request]:
+        """Pick up to ``n`` waiting requests to admit now.  Without a request
+        policy this is exactly the v1 FIFO pop; with one, ``prioritize``
+        orders the queue (ties break FIFO)."""
+        if n <= 0 or not self.waiting:
+            return []                    # full house: don't score the queue
+        if self.request_policy is None:
+            take, self.waiting = self.waiting[:n], self.waiting[n:]
+            return take
+        now = time.monotonic()
+        scored = sorted((self._score(req, now), i)
+                        for i, req in enumerate(self.waiting))
+        picked = sorted(i for _, i in scored[:n])
+        out = [self.waiting[i] for i in picked]
+        for i in reversed(picked):
+            del self.waiting[i]
+        return out
+
+    def _maybe_preempt(self) -> None:
+        """Policy-gated preemption: when every slot is busy and a waiting
+        request outranks the worst-priority running one, evict the victim.
+        Its progress is folded into a continuation request (prompt = original
+        prompt + tokens generated so far) so greedy decoding resumes exactly;
+        the victim's KV/SSM state is re-prefilled on re-admission — the
+        recompute-on-preempt trade every vLLM-style engine makes."""
+        rp = self.request_policy
+        if (rp is None or not rp.preempt or not self.waiting
+                or len(self.active) < self.n_slots):
+            return
+        now = time.monotonic()
+        # rank by prioritize alone: the admit gate answers "may this start
+        # now", which would both veto challengers at exactly the saturation
+        # preemption exists for and shield unadmittable victims
+        best_score = min(self._score(req, now) for req in self.waiting)
+        victims = []
+        for slot, st in self.active.items():
+            req = st.request
+            remaining = req.max_new_tokens - len(st.generated)
+            cont_prompt = list(req.prompt) + list(st.generated)
+            if remaining < 1 or len(cont_prompt) > self.max_prompt_len(remaining):
+                continue                 # nearly done / would not fit: keep it
+            proxy = Request(req.rid, cont_prompt, remaining, req.eos_id,
+                            req.arrival_time)
+            victims.append((self._score(proxy, now), slot, proxy))
+        if not victims:
+            return
+        worst_score, slot, proxy = max(victims, key=lambda v: v[0])
+        if best_score >= worst_score:    # challenger must strictly outrank
+            return
+        st = self.active.pop(slot)       # slot wiped at next claim (reset path)
+        self._preempt_carry[st.request.rid] = (
+            st.first_token_time,
+            st.prior_generated + len(st.generated))
+        self.waiting.append(proxy)
+        self.preemptions += 1
+
+    # ------------------------------------------------------------------ #
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
         """Write the prompt's KV/SSM state into the slot region and produce
         the first generated token (greedy logits at the last prompt position).
@@ -175,6 +289,9 @@ class Engine:
             last = self._prefill_chunks(st, prompt)
         st.generated.append(last)
         st.first_token_time = time.monotonic()
+        carry = self._preempt_carry.pop(req.rid, None)
+        if carry is not None:        # continuation of a preempted request
+            st.first_token_time, st.prior_generated = carry
 
     def _prefill_chunks(self, st: RequestState, prompt: List[int]) -> int:
         slot = st.slot
@@ -229,12 +346,13 @@ class Engine:
     # ------------------------------------------------------------------ #
     def step(self) -> int:
         """One engine iteration; returns number of tokens produced."""
-        # 1. admission (prefill produces the first generated token, which can
-        #    already satisfy the request — max_new_tokens=1 or immediate EOS)
-        for slot in self.free_slots():
-            if not self.waiting:
-                break
-            req = self.waiting.pop(0)
+        # 0. policy-gated preemption frees slots before admission
+        self._maybe_preempt()
+        # 1. admission in request-policy order (v1: FIFO slot-filling);
+        #    prefill produces the first generated token, which can already
+        #    satisfy the request — max_new_tokens=1 or immediate EOS
+        free = self.free_slots()
+        for slot, req in zip(free, self._select_admissions(len(free))):
             self._prefill_into_slot(req, slot)
             st = self.active[slot]
             if (len(st.generated) >= req.max_new_tokens

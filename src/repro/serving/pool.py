@@ -23,6 +23,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.plan import Plan, ReplicaGroup
+from repro.core.policy import RequestPolicy
 from repro.serving.engine import Engine, Request, RequestState
 
 EngineFactory = Callable[[ReplicaGroup], Engine]
@@ -52,6 +53,8 @@ class EnginePool:
         self._backlog_cap = backlog_cap
         self.backlog_dropped = 0         # oldest entries shed past the cap
         self._replicas: Dict[ReplicaGroup, List[Engine]] = {}
+        self.request_policy: Optional[RequestPolicy] = None
+        self.policy_errors = 0           # failing admit hooks (advisory)
         self.plan: Optional[Plan] = None
         self.finished: List[RequestState] = []
         self.backlog: List[Tuple[str, Request]] = []   # (model, request)
@@ -72,6 +75,15 @@ class EnginePool:
             if engine in engines:
                 return g
         return None
+
+    def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
+        """Install request-domain hooks on every current and future replica
+        (None restores v1 FIFO admission).  A pure attribute swap — engines
+        pick the new hooks up at their next step, mirroring policy hot-swap
+        at plan granularity."""
+        self.request_policy = rp
+        for eng in self.engines:
+            eng.request_policy = rp
 
     # ------------------------------------------------------------------ #
     def reconfigure(self, plan: Plan) -> PoolDiff:
@@ -100,10 +112,12 @@ class EnginePool:
                 self._retired_dispatches += eng.dispatches
             del self._replicas[g]
 
-        # 2. build new/changed groups
+        # 2. build new/changed groups (inheriting the live request policy)
         for g in added:
             n = max(1, min(g.count, self._max_replicas))
             self._replicas[g] = [self._factory(g) for _ in range(n)]
+            for eng in self._replicas[g]:
+                eng.request_policy = self.request_policy
 
         # 3. route requeued + backlogged requests onto the new topology
         pending, self.backlog = requeue + self.backlog, []
@@ -128,27 +142,63 @@ class EnginePool:
             del self.backlog[:drop]
             self.backlog_dropped += drop
 
-    def submit(self, model: str, req: Request) -> bool:
-        """Route to the least-loaded replica serving ``model``.  Returns
-        False (and leaves the request to the caller) when no replica serves
-        the model under the current plan."""
+    def submit(self, model: str, req: Request, force: bool = False) -> bool:
+        """Route to the least-loaded replica serving ``model``, gated by the
+        request policy's ``admit`` hook (v2) instead of unconditional
+        least-loaded placement.  Returns False (and leaves the request to the
+        caller) when no replica serves the model under the current plan or
+        the policy declines admission at current load; ``force`` bypasses
+        the gate (drain forced-progress), never the coverage check."""
         engines = self.engines_for(model)
         if not engines:
             return False
         target = min(engines, key=lambda e: (e.load / max(e.n_slots, 1)))
+        if self.request_policy is not None and not force:
+            try:
+                if not self.request_policy.admit(target.request_ctx_for(req)):
+                    return False
+            except Exception:  # noqa: BLE001 — advisory hook, never fatal
+                self.policy_errors += 1
         target.submit(req)
         return True
+
+    def _flush_backlog(self) -> None:
+        """Retry backlogged requests against the current topology/load; the
+        admit gate turns the backlog into a throttle, not a drop."""
+        if not self.backlog:
+            return
+        pending, self.backlog = self.backlog, []
+        for model, req in pending:
+            if not self.submit(model, req):
+                self.backlog.append((model, req))
+
+    def _force_one_backlogged(self) -> bool:
+        """Forced progress when every engine is idle yet the admit gate still
+        declines (evolved hooks may decline unconditionally): push the first
+        routable backlog entry straight to a replica, bypassing the gate.  An
+        admit gate may shed load, never stall a drain.  Returns False when
+        nothing is routable (models no current plan covers stay backlogged)."""
+        for i, (model, req) in enumerate(self.backlog):
+            if self.submit(model, req, force=True):
+                del self.backlog[i]
+                return True
+        return False
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
         """Step engines round-robin until all queues empty; returns newly
         finished.  Interleaving keeps per-request timing (TTFT/TPOT) honest
         across replicas — serial draining would charge replica B's requests
-        for replica A's entire runtime."""
+        for replica A's entire runtime.  Backlogged requests are retried as
+        load drains (admission throttling releases them)."""
         engines = self.engines
         before = {id(e): len(e.finished) for e in engines}
         taken = 0
-        while (any(e.waiting or e.active for e in engines)
-               and taken < max_steps):
+        while taken < max_steps:
+            self._flush_backlog()
+            if not any(e.waiting or e.active for e in engines):
+                if self.backlog and self._force_one_backlogged():
+                    continue
+                break
             for eng in engines:
                 if eng.waiting or eng.active:
                     eng.step()

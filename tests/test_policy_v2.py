@@ -1,0 +1,396 @@
+"""Policy API v2: multi-domain PolicyProgram, v1 compat adapter, request-level
+hook dispatch in the serving layer, and hot-swap failure paths."""
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.evaluator import Evaluator
+from repro.core.plan import HARDWARE, QWEN25_FAMILY
+from repro.core.policy import (DEFAULT_GENOME, GENOME_PREFIX, Policy,
+                               PolicyDomainError, PolicyProgram, parse_genome,
+                               render_policy, seed_policies)
+from repro.core.runtime import DataPlane, PolicyStage, SnapshotBuffer
+from repro.core.simulator import Simulator
+from repro.models import lm
+from repro.serving.backend import (SimBackend, make_jax_backend,
+                                   measured_interval_metrics)
+from repro.serving.engine import Engine, Request, RequestCtx
+from repro.serving.pool import EnginePool
+from repro.traces import volatile_workload_trace
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+EV = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0)
+
+CFG = get_config("qwen2-1.5b").reduced()
+PARAMS = lm.init_params(CFG, jax.random.PRNGKey(0))
+
+V1_SOURCE = (
+    "def should_reschedule(ctx):\n"
+    "    return True\n"
+    "def schedule(ctx):\n"
+    "    return greedy_schedule(ctx)\n"
+)
+
+REQUEST_ONLY_SOURCE = (
+    "def admit(r):\n"
+    "    return r.queue_depth < 100\n"
+    "def prioritize(r):\n"
+    "    return float(r.prompt_len + r.max_new_tokens)\n"
+)
+
+
+def _rp(genome, name="rp"):
+    full = dict(genome, domains=["placement", "request"])
+    return render_policy(full, name=name).request_policy()
+
+
+# --------------------------------------------------------------------------- #
+# program compilation / compat adapter
+# --------------------------------------------------------------------------- #
+def test_v1_source_loads_as_placement_only_program():
+    pol = Policy(source=V1_SOURCE).compile()
+    assert pol.domains == ("placement",)
+    assert pol.api_version == 1
+    assert pol.implements("placement") and not pol.implements("request")
+    assert pol.request_policy() is None
+    # evaluator runs it unmodified through the adapter
+    assert EV.evaluate(pol, volatile_workload_trace()).valid
+
+
+def test_seed_policies_are_valid_programs():
+    tr = volatile_workload_trace()
+    for name, pol in seed_policies().items():
+        pol.compile()
+        assert pol.implements("placement"), name
+        assert EV.evaluate(pol, tr).valid, name
+    assert seed_policies()["sjf-request"].implements("request")
+    assert not seed_policies()["greedy-reactive"].implements("request")
+
+
+def test_unimplemented_domain_raises_policy_domain_error():
+    pol = Policy(source=REQUEST_ONLY_SOURCE).compile()
+    assert pol.domains == ("request",)
+    with pytest.raises(PolicyDomainError):
+        pol.should_reschedule(None)
+
+
+def test_request_only_program_is_not_evaluable_but_not_a_crash():
+    res = EV.evaluate(Policy(source=REQUEST_ONLY_SOURCE),
+                      volatile_workload_trace())
+    assert not res.valid and "placement" in res.error
+
+
+def test_declared_domain_without_hooks_rejected():
+    src = ('POLICY_DOMAINS = ("placement", "request")\n' + V1_SOURCE)
+    with pytest.raises(ValueError, match="does not define"):
+        Policy(source=src).compile()
+
+
+def test_unknown_domain_rejected():
+    src = 'POLICY_DOMAINS = ("quantum",)\n' + V1_SOURCE
+    with pytest.raises(ValueError, match="unknown domain"):
+        Policy(source=src).compile()
+
+
+# --------------------------------------------------------------------------- #
+# genome → render → parse golden round-trip
+# --------------------------------------------------------------------------- #
+GOLDEN_GENOME_LINE = GENOME_PREFIX + (
+    '{"admit_load_cap": 0.0, "allow_split": false, "batch_scheme": "pow2", '
+    '"domains": ["placement", "request"], "heterogeneity_aware": true, '
+    '"intra_node_only": false, "migration_keep_threshold": 0.0, '
+    '"min_interval": 1, "preempt": false, "priority_kind": "sjf", '
+    '"reconfig_penalty": 0.0, "scheduler": "greedy", "shift_threshold": 0.3, '
+    '"slo_ttft_s": 2.0, "time_budget": 2.0, "tp_floor_large": 0, '
+    '"trigger_kind": "always", "weighted_obj": false}')
+
+
+def test_genome_render_parse_golden_roundtrip():
+    pol = render_policy({"domains": ["placement", "request"],
+                         "priority_kind": "sjf"})
+    # golden header: schema drift (new/renamed/retyped genome keys) must be a
+    # conscious change, not an accident
+    assert pol.source.splitlines()[0] == GOLDEN_GENOME_LINE
+    parsed = parse_genome(pol.source)
+    assert parsed == pol.genome
+    assert json.loads(GOLDEN_GENOME_LINE[len(GENOME_PREFIX):]) == parsed
+    # re-rendering the parsed genome is byte-identical (idempotent)
+    assert render_policy(parsed).source == pol.source
+    pol.compile()
+    assert pol.domains == ("placement", "request")
+    assert pol.api_version == 2
+
+
+def test_default_genome_covers_template_knobs():
+    pol = render_policy({})
+    pol.compile()
+    assert pol.domains == ("placement",)
+    assert parse_genome(pol.source) == dict(DEFAULT_GENOME)
+
+
+# --------------------------------------------------------------------------- #
+# hot-swap failure paths
+# --------------------------------------------------------------------------- #
+def _dataplane(backend=None):
+    return DataPlane(EV, seed_policies()["greedy-reactive"], PolicyStage(),
+                     SnapshotBuffer(), backend=backend)
+
+
+def test_staged_source_with_no_known_domain_is_rejected():
+    dp = _dataplane()
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    # compiles fine, but defines no hooks from any registered domain
+    dp.stage.publish(PolicyProgram(source="def helper(x):\n    return x\n",
+                                   name="no-domain"))
+    out = dp.step(tr.observations[1])          # must not raise
+    assert dp.swap_count == 0
+    assert out["plan"] is not None
+    assert dp.policy.name == "greedy-reactive"
+
+
+def test_staged_v1_source_hot_swaps_through_adapter():
+    dp = _dataplane()
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    dp.stage.publish(PolicyProgram(source=V1_SOURCE, name="raw-v1"))
+    dp.step(tr.observations[1])
+    assert dp.swap_count == 1
+    assert dp.policy.api_version == 1
+    assert dp.policy.domains == ("placement",)
+
+
+def test_hot_swap_pushes_request_policy_to_backend():
+    backend = SimBackend(SIM)
+    dp = _dataplane(backend=backend)
+    assert backend.request_policy is None      # placement-only initial policy
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    dp.stage.publish(render_policy({"domains": ["placement", "request"],
+                                    "priority_kind": "sjf"}, name="v2"))
+    dp.step(tr.observations[1])
+    assert dp.swap_count == 1
+    assert backend.request_policy is not None
+    assert backend.request_policy.name == "swap-v1"
+    # swapping back to a placement-only program resets FIFO admission
+    dp.stage.publish(render_policy({}, name="v1-ish"))
+    dp.step(tr.observations[2])
+    assert backend.request_policy is None
+
+
+def test_request_only_staged_program_keeps_placement_policy():
+    backend = SimBackend(SIM)
+    dp = _dataplane(backend=backend)
+    tr = volatile_workload_trace()
+    dp.step(tr.observations[0])
+    dp.stage.publish(PolicyProgram(source=REQUEST_ONLY_SOURCE, name="req"))
+    out = dp.step(tr.observations[1])
+    assert dp.swap_count == 1
+    assert dp.policy.name == "greedy-reactive"  # placement untouched
+    assert backend.request_policy is not None   # request hooks installed
+    assert out["plan"] is not None
+
+
+# --------------------------------------------------------------------------- #
+# engine / pool dispatch
+# --------------------------------------------------------------------------- #
+def test_engine_sjf_admission_order():
+    rp = _rp({"priority_kind": "sjf"})
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=48, request_policy=rp)
+    eng.submit(Request(rid=0, prompt=[1] * 20, max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=[2] * 2, max_new_tokens=2))
+    done = eng.run_until_drained()
+    assert [d.request.rid for d in done] == [1, 0]   # short job jumps the queue
+    # FIFO (no policy) preserves submission order on the identical burst
+    eng2 = Engine(CFG, PARAMS, n_slots=1, max_seq_len=48)
+    eng2.submit(Request(rid=0, prompt=[1] * 20, max_new_tokens=4))
+    eng2.submit(Request(rid=1, prompt=[2] * 2, max_new_tokens=2))
+    assert [d.request.rid for d in eng2.run_until_drained()] == [0, 1]
+
+
+def test_engine_preemption_resumes_greedy_exactly():
+    rp = _rp({"priority_kind": "sjf", "preempt": True})
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64, request_policy=rp)
+    eng.submit(Request(rid=0, prompt=[1] * 16, max_new_tokens=8))
+    eng.step(); eng.step()                      # long job mid-decode
+    ft0 = next(iter(eng.active.values())).first_token_time
+    eng.submit(Request(rid=1, prompt=[2] * 2, max_new_tokens=2))
+    done = eng.run_until_drained()
+    assert eng.preemptions == 1
+    assert done[0].request.rid == 1             # challenger finished first
+    solo = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64)
+    solo.submit(Request(rid=0, prompt=[1] * 16, max_new_tokens=8))
+    want = solo.run_until_drained()[0].generated
+    cont = next(d for d in done if d.request.rid == 0)
+    got = list(cont.request.prompt[16:]) + list(cont.generated)
+    assert got == want                          # continuation is exact
+    # metric continuity: pre-preemption tokens still count as output, and
+    # the victim's TTFT is not reset by the re-prefill
+    assert cont.prior_generated + len(cont.generated) == 8
+    assert cont.first_token_time == ft0
+    m = measured_interval_metrics(done, wall=1.0)
+    assert m.tokens == 8 + 2                    # victim budget + challenger
+
+
+def test_request_hooks_cannot_reach_scheduler_machinery():
+    """Per-domain namespaces: request hooks compile against the restricted
+    request namespace, so scheduler building blocks are NameErrors there
+    even though the same source's placement hooks can use them."""
+    src = ("def should_reschedule(ctx):\n    return True\n"
+           "def schedule(ctx):\n    return greedy_schedule(ctx)\n"
+           "def admit(r):\n    return True\n"
+           "def prioritize(r):\n    return greedy_schedule(r)\n")
+    pol = Policy(source=src).compile()
+    assert pol.domains == ("placement", "request")
+    rp = pol.request_policy()
+    r = RequestCtx(rid=0, prompt_len=1, max_new_tokens=1, age_s=0.0,
+                   queue_depth=0, active=0, n_slots=1)
+    with pytest.raises(NameError):
+        rp.prioritize(r)
+    # the engine treats that as an advisory failure, not a crash
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=48, request_policy=rp)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    assert len(eng.run_until_drained()) == 1 and eng.policy_errors > 0
+
+
+def test_failing_request_hooks_never_kill_serving():
+    bad = Policy(source="def admit(r):\n    raise ValueError('boom')\n"
+                        "def prioritize(r):\n    return 1 / 0\n",
+                 name="bad").compile().request_policy()
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=48, request_policy=bad)
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    done = eng.run_until_drained()
+    assert len(done) == 1 and eng.policy_errors > 0
+
+
+def test_admit_gate_is_ingress_only_and_never_stalls_the_drain():
+    # accepted work fills slots freely even under a load-cap genome — admit
+    # gates ingress (pool.submit), not slot admission, where it would be
+    # self-referential and collapse batching
+    rp = _rp({"admit_load_cap": 1.0})
+    eng = Engine(CFG, PARAMS, n_slots=2, max_seq_len=48, request_policy=rp)
+    for r in range(4):
+        eng.submit(Request(rid=r, prompt=[1 + r], max_new_tokens=3))
+    eng.step()
+    assert len(eng.active) == 2                 # both slots fill immediately
+    assert len(eng.run_until_drained()) == 4
+
+
+def test_pool_forces_progress_past_an_always_declining_admit_gate():
+    """Evolved hooks may decline unconditionally; the pool must still drain
+    its backlog once engines sit idle (shed load, never stall)."""
+    from repro.core.plan import Plan, ReplicaGroup
+    always_no = Policy(source="def admit(r):\n    return False\n"
+                              "def prioritize(r):\n    return 0.0\n",
+                       name="no").compile().request_policy()
+    pool = EnginePool(lambda g: Engine(CFG, PARAMS, n_slots=2, max_seq_len=48))
+    pool.set_request_policy(always_no)
+    pool.reconfigure(Plan((ReplicaGroup("m-a", "H100-80G", 1, 2, 1),)))
+    for r in range(3):
+        req = Request(rid=r, prompt=[1 + r], max_new_tokens=2)
+        assert not pool.submit("m-a", req)       # gate declines everything
+        pool.add_backlog("m-a", req)
+    done = pool.run_until_drained()
+    assert len(done) == 3 and not pool.backlog
+
+
+def test_pool_admit_gate_and_backlog_throttle():
+    from repro.core.plan import Plan, ReplicaGroup
+    pool = EnginePool(lambda g: Engine(CFG, PARAMS, n_slots=2, max_seq_len=48))
+    pool.set_request_policy(_rp({"admit_load_cap": 1.0}))
+    g = ReplicaGroup("m-a", "H100-80G", tp=1, batch=2, count=1)
+    pool.reconfigure(Plan((g,)))
+    assert pool.engines[0].request_policy is not None   # policy reaches builds
+    accepted = sum(pool.submit("m-a", Request(rid=r, prompt=[1 + r],
+                                              max_new_tokens=2))
+                   for r in range(6))
+    assert accepted < 6                          # the gate sheds past the cap
+    for r in range(6):
+        if r >= accepted:
+            pool.add_backlog("m-a", Request(rid=r, prompt=[1 + r],
+                                            max_new_tokens=2))
+    done = pool.run_until_drained()
+    assert len(done) == 6 and not pool.backlog   # backlog drains as load falls
+
+
+# --------------------------------------------------------------------------- #
+# measured interval metrics (p50/p95 TTFT, pooled TPOT)
+# --------------------------------------------------------------------------- #
+class _FakeState:
+    def __init__(self, arrival, first, finish, n_tokens):
+        self.request = Request(rid=0, prompt=[1], arrival_time=arrival)
+        self.first_token_time = first
+        self.finish_time = finish
+        self.generated = list(range(n_tokens))
+
+
+def test_pooled_tpot_includes_single_token_completions():
+    done = [
+        _FakeState(0.0, 1.0, 1.0, 1),        # single-token: 0 decode tokens
+        _FakeState(0.0, 1.0, 3.0, 5),        # 4 decode tokens over 2 s
+    ]
+    m = measured_interval_metrics(done, wall=3.0)
+    assert m.requests == 2 and m.tokens == 6
+    assert m.tpot_s == pytest.approx(2.0 / 4.0)
+    # a second single-token completion must not change pooled TPOT
+    m2 = measured_interval_metrics(done + [_FakeState(0.0, 2.0, 2.0, 1)],
+                                   wall=3.0)
+    assert m2.tpot_s == pytest.approx(2.0 / 4.0)
+
+
+def test_ttft_percentiles_reported():
+    done = [_FakeState(0.0, t, t + 1.0, 3) for t in
+            (0.1, 0.2, 0.3, 0.4, 5.0)]
+    m = measured_interval_metrics(done, wall=6.0)
+    assert m.ttft_p50_s == pytest.approx(0.3)
+    assert m.ttft_p95_s == pytest.approx(5.0)
+    assert m.ttft_p50_s <= m.ttft_s <= m.ttft_p95_s
+
+
+def test_jax_backend_serve_interval_reports_percentiles():
+    from repro.core.plan import Plan, ReplicaGroup
+    backend = make_jax_backend("qwen2-1.5b", max_seq_len=48, slots_cap=2,
+                               max_replicas_per_group=1, requests_per_model=2,
+                               max_new_tokens=3)
+    w = volatile_workload_trace().observations[0].workloads
+    backend.apply_plan(Plan(tuple(ReplicaGroup(x.model, "H100-80G", 1, 2, 1)
+                                  for x in w)), None)
+    met = backend.serve_interval(list(w))
+    assert met.measured
+    assert 0.0 < met.ttft_p50_s <= met.ttft_p95_s
+    assert met.tpot_s > 0.0
+
+
+def test_slo_aware_orders_differently_from_fifo_and_sjf():
+    rp = _rp({"priority_kind": "slo-aware", "slo_ttft_s": 1.0})
+
+    def rctx(age, plen):
+        return RequestCtx(rid=0, prompt_len=plen, max_new_tokens=2, age_s=age,
+                          queue_depth=2, active=1, n_slots=1)
+    # on-time requests: shortest job first, regardless of age
+    assert rp.prioritize(rctx(0.9, 4)) < rp.prioritize(rctx(0.1, 40))
+    # a request past its TTFT target beats every on-time one…
+    assert rp.prioritize(rctx(1.5, 40)) < rp.prioritize(rctx(0.1, 4))
+    # …and among late requests the most-late goes first
+    assert rp.prioritize(rctx(3.0, 40)) < rp.prioritize(rctx(1.5, 4))
+
+
+def test_preemption_fires_under_admit_load_cap():
+    """The admit gate must not veto preemption at saturation — victims and
+    challengers are ranked by prioritize alone."""
+    rp = _rp({"priority_kind": "sjf", "preempt": True, "admit_load_cap": 1.0})
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64, request_policy=rp)
+    eng.submit(Request(rid=0, prompt=[1] * 16, max_new_tokens=8))
+    eng.step(); eng.step()
+    eng.submit(Request(rid=1, prompt=[2] * 2, max_new_tokens=2))
+    done = eng.run_until_drained()
+    assert eng.preemptions == 1 and done[0].request.rid == 1
+
+
+def test_request_ctx_slot_load():
+    r = RequestCtx(rid=0, prompt_len=4, max_new_tokens=2, age_s=0.0,
+                   queue_depth=3, active=2, n_slots=4)
+    assert r.slot_load == pytest.approx(0.5)
