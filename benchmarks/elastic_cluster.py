@@ -1,8 +1,29 @@
 """Table 3 — elastic cluster dynamics (§8.2): full- vs minimal-migration vs
-evolved on MAF-style volatile/stable cluster traces."""
+evolved on MAF-style volatile/stable cluster traces, PLUS the measured
+data-plane counterpart: replaying the elastic traces' cluster churn as plan
+changes on a REAL engine pool with in-flight load, comparing the three
+reconfig-domain modes (drain | migrate | recompute) on measured
+reconfiguration wall-clock and post-reconfig TTFT.
+
+``--smoke`` runs only the measured comparison at reduced load (CI mode);
+the artifact lands in ``benchmarks/artifacts/elastic_cluster.json`` and the
+acceptance gate is migrate ≤ drain measured reconfig wall-clock on the
+``elastic-volatile`` trace.
+"""
 from __future__ import annotations
 
+import sys
+import time
+
+import jax
+
 from benchmarks.common import Row, baseline, emit, env, evolve, save_json
+from repro.configs import get_config
+from repro.core.plan import Plan, ReplicaGroup
+from repro.core.policy import render_policy
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.pool import EnginePool
 from repro.traces.workload import elastic_cluster_traces
 
 
@@ -11,33 +32,152 @@ def _tok(trace) -> float:
                for o in trace.observations for w in o.workloads)
 
 
-def run() -> list:
-    sim, ev = env()
+# --------------------------------------------------------------------------- #
+# measured migrate-vs-drain on a real engine pool
+# --------------------------------------------------------------------------- #
+def _plan_for(cluster_total: int, model: str) -> Plan:
+    """Map the trace's cluster size onto a replica-group shape; consecutive
+    elastic observations always land on a different group, so every step
+    forces a removal + build (the reconfiguration under test)."""
+    batch = 2 + (cluster_total // 8) % 3
+    return Plan((ReplicaGroup(model, "H100-80G", tp=1, batch=batch, count=2),))
+
+
+def measured_reconfig(trace, mode: str, cfg, params, n_requests: int = 4,
+                      max_new: int = 12, n_slots: int = 4) -> dict:
+    """Replay the elastic trace's cluster sizes as plan changes with
+    requests in flight; measure per-reconfig wall-clock and the TTFT of
+    probe requests submitted right after each plan change."""
+    pool = EnginePool(lambda g: Engine(cfg, params, n_slots=n_slots,
+                                       max_seq_len=96))
+    pool.set_reconfig_policy(render_policy(
+        {"domains": ["placement", "reconfig"], "migration_mode": mode},
+        name=mode).reconfig_policy())
+    model = cfg.name
+    rid = 0
+
+    def burst(n: int, tag: list) -> None:
+        nonlocal rid
+        for _ in range(n):
+            rid += 1
+            tag.append(rid)
+            req = Request(rid=rid,
+                          prompt=[1 + (rid + j) % (cfg.vocab_size - 2)
+                                  for j in range(12)],
+                          max_new_tokens=max_new)
+            if not pool.submit(model, req):
+                pool.add_backlog(model, req)
+
+    obs = trace.observations
+    pool.reconfigure(_plan_for(obs[0].cluster.total, model))
+    # warm the jit caches (decode/prefill shapes AND the install scatter):
+    # one throwaway reconfig cycle so the measured loop sees steady state
+    warm: list = []
+    burst(n_requests, warm)
+    for e in pool.engines:
+        e.step()
+    pool.reconfigure(_plan_for(obs[1].cluster.total, model))
+    pool.run_until_drained()
+    pool.reconfigure(_plan_for(obs[0].cluster.total, model))
+    pool.run_until_drained()
+
+    walls, mig_walls, drain_walls, ttfts = [], [], [], []
+    migrated = drained = recomputed = 0
+    for o in obs[1:]:
+        burst(n_requests, [])
+        for e in pool.engines:
+            e.step(); e.step()              # put the burst in flight
+        d = pool.reconfigure(_plan_for(o.cluster.total, model))
+        walls.append(d.wall_s)
+        mig_walls.append(d.migrate_wall_s)
+        drain_walls.append(d.drain_wall_s)
+        migrated += d.migrated_requests
+        drained += d.drained_requests
+        recomputed += d.recomputed_requests
+        probes: list = []
+        burst(2, probes)                    # post-reconfig TTFT probes
+        done = pool.run_until_drained()
+        ttfts += [s.first_token_time - s.request.arrival_time
+                  for s in done if s.request.rid in probes
+                  and s.first_token_time is not None]
+    served = len(pool.finished)
+    assert served == rid, f"dropped requests: served {served} of {rid}"
+    return {
+        "mode": mode,
+        "reconfig_wall_s": sum(walls),
+        "mean_reconfig_wall_s": sum(walls) / len(walls),
+        "migrate_wall_s": sum(mig_walls),
+        "drain_wall_s": sum(drain_walls),
+        "post_reconfig_ttft_s": sum(ttfts) / max(len(ttfts), 1),
+        "migrated": migrated, "drained": drained, "recomputed": recomputed,
+        "requests_served": served,
+    }
+
+
+def run(smoke: bool = False) -> list:
     rows: list = []
-    payload = {}
-    for name, trace in elastic_cluster_traces().items():
-        toks = _tok(trace)
-        res = {
-            "full-migration": ev.evaluate(baseline("full-migration"), trace),
-            "minimal-migration": ev.evaluate(baseline("minimal-migration"),
-                                             trace),
-        }
-        best = evolve(ev, trace, iters=30, seed=0).best
-        res["ours"] = best.result
-        payload[name] = {k: r.artifact_feedback() for k, r in res.items()}
-        payload[name]["ours_genome"] = best.policy.genome
-        for k, r in res.items():
-            thpt = toks / r.fitness if r.valid else 0.0
-            rows.append((f"table3/{name}/{k}", r.sum_sched * 1e6,
-                         f"stale={r.sum_stale:.1f}s rc={r.sum_reconfig:.1f}s "
-                         f"T={r.fitness:.1f}s thpt={thpt:.0f}t/s"))
-        base = min(res["full-migration"].fitness,
-                   res["minimal-migration"].fitness)
-        rows.append((f"table3/{name}/improvement", 0.0,
-                     f"{(1 - res['ours'].fitness / base) * 100:.1f}% vs best baseline"))
-    save_json("table3_elastic", payload)
+    payload: dict = {"smoke": smoke}
+
+    # ---- measured data plane: drain vs migrate vs recompute ----
+    cfg = get_config("qwen2-1.5b").reduced()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    # enough in-flight decode budget that the drain path's blocking cost is
+    # clearly visible over the (mode-independent) group build cost
+    kwargs = dict(n_requests=3, max_new=24) if smoke else \
+        dict(n_requests=4, max_new=24)
+    measured: dict = {}
+    for tname, trace in elastic_cluster_traces().items():
+        measured[tname] = {}
+        for mode in ("drain", "migrate", "recompute"):
+            m = measured_reconfig(trace, mode, cfg, params, **kwargs)
+            measured[tname][mode] = m
+            rows.append((
+                f"table3/{tname}/measured/{mode}",
+                m["reconfig_wall_s"] * 1e6,
+                f"reconfig={m['reconfig_wall_s'] * 1e3:.1f}ms "
+                f"post_ttft={m['post_reconfig_ttft_s'] * 1e3:.0f}ms "
+                f"mig={m['migrated']} drain={m['drained']} "
+                f"rec={m['recomputed']}"))
+        ratio = (measured[tname]["migrate"]["reconfig_wall_s"]
+                 / max(measured[tname]["drain"]["reconfig_wall_s"], 1e-9))
+        rows.append((f"table3/{tname}/measured/migrate_vs_drain", 0.0,
+                     f"wall_ratio={ratio:.2f}x (<1 = migration wins)"))
+    payload["measured_reconfig"] = measured
+    vol = measured["elastic-volatile"]
+    assert (vol["migrate"]["reconfig_wall_s"]
+            <= vol["drain"]["reconfig_wall_s"]), (
+        "live migration must not cost more reconfig wall-clock than "
+        f"synchronous drain: migrate={vol['migrate']['reconfig_wall_s']:.3f}s "
+        f"drain={vol['drain']['reconfig_wall_s']:.3f}s")
+
+    # ---- simulator-level Table 3 (skipped in smoke/CI mode) ----
+    if not smoke:
+        sim, ev = env()
+        for name, trace in elastic_cluster_traces().items():
+            toks = _tok(trace)
+            res = {
+                "full-migration": ev.evaluate(baseline("full-migration"),
+                                              trace),
+                "minimal-migration": ev.evaluate(baseline("minimal-migration"),
+                                                 trace),
+            }
+            best = evolve(ev, trace, iters=30, seed=0).best
+            res["ours"] = best.result
+            payload[name] = {k: r.artifact_feedback() for k, r in res.items()}
+            payload[name]["ours_genome"] = best.policy.genome
+            for k, r in res.items():
+                thpt = toks / r.fitness if r.valid else 0.0
+                rows.append((f"table3/{name}/{k}", r.sum_sched * 1e6,
+                             f"stale={r.sum_stale:.1f}s rc={r.sum_reconfig:.1f}s "
+                             f"T={r.fitness:.1f}s thpt={thpt:.0f}t/s"))
+            base = min(res["full-migration"].fitness,
+                       res["minimal-migration"].fitness)
+            rows.append((f"table3/{name}/improvement", 0.0,
+                         f"{(1 - res['ours'].fitness / base) * 100:.1f}% "
+                         "vs best baseline"))
+    save_json("elastic_cluster", payload)
     return rows
 
 
 if __name__ == "__main__":
-    emit(run())
+    emit(run(smoke="--smoke" in sys.argv))

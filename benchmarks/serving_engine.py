@@ -114,6 +114,59 @@ def request_policy_sweep(cfg=None, params=None, n_requests: int = 12,
     return out
 
 
+def migration_microbench(cfg, params, prompt_len: int = 48, max_new: int = 16,
+                         move_after: int = 4) -> dict:
+    """Engine-level cost of the three ways to move one in-flight request:
+    carry its slot state (export+install, no recompute), requeue a
+    continuation (re-prefill), or block until it drains.  All three resume
+    greedy-exactly; the wall-clocks are what the reconfig genome trades."""
+    prompt = [1 + (5 * j) % (cfg.vocab_size - 2) for j in range(prompt_len)]
+    # persistent engines: jit caches are per-Engine, so the warm-up pass
+    # must reuse the same source/target pair the measured pass uses
+    src = Engine(cfg, params, n_slots=2, max_seq_len=256)
+    dst = Engine(cfg, params, n_slots=2, max_seq_len=256)
+
+    def mid_flight():
+        src.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+        for _ in range(move_after):
+            src.step()
+
+    ref = Engine(cfg, params, n_slots=2, max_seq_len=256)
+    ref.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+    want = ref.run_until_drained()[0].generated
+
+    out = {}
+    for repeat in range(2):              # first pass warms the jit caches
+        # both timing windows end after ONE destination engine step, so the
+        # difference between them is exactly the re-prefill work migrate skips
+        mid_flight()
+        t0 = time.monotonic()
+        [export] = src.export_active()
+        installed = dst.install_active(export)
+        dst.step()
+        out["migrate_ms"] = (time.monotonic() - t0) * 1e3
+        assert installed, "install_active refused a compatible engine"
+        got = dst.run_until_drained()[-1].generated
+        assert got == want, "migrated continuation diverged"
+
+        mid_flight()
+        t0 = time.monotonic()
+        [export] = src.export_active(with_state=False)
+        dst.submit(export.request)
+        dst.step()                       # chunked re-prefill + one decode
+        out["recompute_ms"] = (time.monotonic() - t0) * 1e3
+        fin = dst.run_until_drained()[-1]
+        assert (list(fin.request.prompt[prompt_len:]) + fin.generated == want)
+
+        mid_flight()
+        t0 = time.monotonic()
+        src.waiting.clear()
+        src.run_until_drained()          # blocking drain of the remaining budget
+        out["drain_ms"] = (time.monotonic() - t0) * 1e3
+    out["exact"] = True
+    return out
+
+
 def run(arch: str = "qwen2-1.5b", n_requests: int = 8, prompt_len: int = 48,
         max_new: int = 8) -> list:
     cfg = get_config(arch).reduced()
@@ -150,12 +203,20 @@ def run(arch: str = "qwen2-1.5b", n_requests: int = 8, prompt_len: int = 48,
              f"p95_ttft={m['p95_ttft_s'] * 1e3:.0f}ms "
              f"ttft_vs_fifo={m['mean_ttft_s'] / fifo:.2f}x "
              f"preempt={m['preemptions']}"))
+    # ---- reconfig domain: per-request cost of migrate/recompute/drain ----
+    mig = migration_microbench(cfg, params, prompt_len=prompt_len)
+    rows.append(
+        (f"serving_engine/{arch}/migration", mig["migrate_ms"] * 1e3,
+         f"migrate={mig['migrate_ms']:.1f}ms "
+         f"recompute={mig['recompute_ms']:.1f}ms "
+         f"drain={mig['drain_ms']:.1f}ms (greedy-exact)"))
     save_json("serving_engine", {
         "arch": arch, "prompt_len": prompt_len, "n_requests": n_requests,
         "legacy": {k: v for k, v in legacy.items() if k != "generated"},
         "chunked": {k: v for k, v in chunked.items() if k != "generated"},
         "dispatch_reduction": ratio, "tok_s_speedup": speedup,
-        "request_policy_sweep": sweep})
+        "request_policy_sweep": sweep,
+        "migration_microbench": mig})
     assert ratio >= 3.0, f"dispatch reduction {ratio:.1f}x below 3x target"
     assert sweep["sjf"]["mean_ttft_s"] < fifo, \
         "sjf request policy must beat FIFO mean TTFT under a bursty workload"

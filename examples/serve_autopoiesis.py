@@ -64,6 +64,8 @@ def main():
             line += (f"\n    [pool]{who} reconfig: built={len(rep.built)} "
                      f"reused={len(rep.reused)} removed={len(rep.removed)} "
                      f"drained={rep.drained_requests} "
+                     f"migrated={rep.migrated_requests} "
+                     f"recomputed={rep.recomputed_requests} "
                      f"measured={rep.wall_s * 1e3:.1f}ms "
                      f"(sim estimate {rep.simulated_s:.1f}s)")
         if met is not None:

@@ -94,6 +94,9 @@ _NUMERIC_STEPS = {
     # enters at the floor instead of a degenerate near-zero cap
     "admit_load_cap": (1.0, 8.0, 1.5),
     "slo_ttft_s": (0.1, 10.0, 1.6),
+    # reconfig domain: how much decode progress a request needs before its
+    # slot state is worth carrying instead of recomputing
+    "migrate_min_progress": (0.0, 0.9, 1.6),
 }
 _CATEGORICAL = {
     "scheduler": ["greedy", "bnb", "hybrid"],
@@ -106,11 +109,15 @@ _CATEGORICAL = {
     "allow_split": [False, True],
     "priority_kind": ["fifo", "sjf", "slo-aware"],   # request domain
     "preempt": [False, True],
+    "migration_mode": ["drain", "migrate", "recompute"],   # reconfig domain
 }
-# touching any of these implicitly turns the request domain on — a mutation
-# that sets priority_kind=sjf on a placement-only parent must actually
-# change the rendered program, not silently no-op
-_REQUEST_KEYS = ("priority_kind", "admit_load_cap", "preempt", "slo_ttft_s")
+# touching any of these implicitly turns its domain on — a mutation that
+# sets priority_kind=sjf (or migration_mode=migrate) on a placement-only
+# parent must actually change the rendered program, not silently no-op
+_DOMAIN_KEYS = {
+    "request": ("priority_kind", "admit_load_cap", "preempt", "slo_ttft_s"),
+    "reconfig": ("migration_mode", "migrate_min_progress"),
+}
 
 
 def _bump(rng: random.Random, val: float, lo: float, hi: float,
@@ -148,6 +155,9 @@ class StructuredMutator(Mutator):
                 move = rng.choice([
                     ("reconfig_penalty", +1), ("migration_keep_threshold", +1),
                     ("shift_threshold", +1), ("trigger_kind", "hybrid"),
+                    # or stop paying for transitions at all: carry the live
+                    # KV/SSM slots across the plan change
+                    ("migration_mode", "migrate"),
                 ])
             elif dom == "stale" and terms["stale"] > 0.02 * total:
                 move = rng.choice([
@@ -174,8 +184,7 @@ class StructuredMutator(Mutator):
                 g[key] = _bump(rng, float(g[key]), lo, hi, step, d)
             else:
                 g[key] = d
-            if key in _REQUEST_KEYS:
-                g["domains"] = _with_request_domain(g)
+            _enable_domain_for(g, key)
         else:
             # exploration: perturb 1–2 random knobs
             for _ in range(rng.randint(1, 2)):
@@ -186,8 +195,7 @@ class StructuredMutator(Mutator):
                                    rng.choice([-1, 1]))
                 else:
                     g[key] = rng.choice(_CATEGORICAL[key])
-                if key in _REQUEST_KEYS:
-                    g["domains"] = _with_request_domain(g)
+                _enable_domain_for(g, key)
 
         # occasional crossover with a population elite
         elites = population_context.get("elite_genomes", [])
@@ -195,21 +203,28 @@ class StructuredMutator(Mutator):
             other = rng.choice(elites)
             for key in rng.sample(list(other), k=max(1, len(other) // 3)):
                 # never copy "domains" wholesale: inheriting a placement-only
-                # list would silently strip the child's request domain while
-                # its request knobs remain in the genome, inert
+                # list would silently strip the child's request/reconfig
+                # domains while their knobs remain in the genome, inert
                 if key in DEFAULT_GENOME and key != "domains":
                     g[key] = other[key]
-                    if (key in _REQUEST_KEYS
-                            and "request" in other.get("domains", ())):
-                        # inheriting a request knob from a request-domain
-                        # elite must carry the domain, or the knob is inert
-                        g["domains"] = _with_request_domain(g)
+                    dom = _domain_of_key(key)
+                    if dom and dom in other.get("domains", ()):
+                        # inheriting a domain knob from an elite implementing
+                        # that domain must carry the domain, or it is inert
+                        _enable_domain_for(g, key)
 
         return render_policy(g, name=f"{parent.name}*")
 
 
-def _with_request_domain(g: Dict[str, Any]) -> List[str]:
+def _domain_of_key(key: str) -> Optional[str]:
+    return next((d for d, ks in _DOMAIN_KEYS.items() if key in ks), None)
+
+
+def _enable_domain_for(g: Dict[str, Any], key: str) -> None:
+    dom = _domain_of_key(key)
+    if dom is None:
+        return
     domains = list(g.get("domains", ["placement"]))
-    if "request" not in domains:
-        domains.append("request")
-    return domains
+    if dom not in domains:
+        domains.append(dom)
+    g["domains"] = domains

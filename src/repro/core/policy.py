@@ -51,6 +51,11 @@ POLICY_API_VERSION = 2
 DOMAINS: Dict[str, Tuple[str, ...]] = {
     "placement": ("should_reschedule", "schedule"),
     "request": ("admit", "prioritize"),
+    # reconfig: what happens to each in-flight request when its replica is
+    # removed by a plan change — drain (block until it finishes), migrate
+    # (carry its KV/SSM slot state to a survivor), or recompute (requeue a
+    # continuation and pay the re-prefill)
+    "reconfig": ("migration_mode",),
 }
 
 # default genome = paper's "reactive baseline" starting point
@@ -74,6 +79,9 @@ DEFAULT_GENOME: Dict[str, Any] = {
     "admit_load_cap": 0.0,          # 0 = unlimited; else outstanding ≤ cap×slots
     "preempt": False,               # evict the worst-priority running request
     "slo_ttft_s": 2.0,              # slo-aware target for slack computation
+    # --- reconfig domain (consulted only when "reconfig" in domains) ---
+    "migration_mode": "drain",      # drain | migrate | recompute
+    "migrate_min_progress": 0.0,    # min decode-budget fraction to carry state
 }
 
 
@@ -98,14 +106,15 @@ def policy_namespace(domain: Optional[str] = None) -> Dict[str, Any]:
     every domain — what :meth:`PolicyProgram.compile` executes sources in).
 
     The paper exposes the simulator and scheduling building blocks to
-    generated *placement* programs; *request* programs run on the serving
-    hot path and see only arithmetic — they must stay cheap and effect-free.
+    generated *placement* programs; *request* and *reconfig* programs run on
+    the serving hot path / inside the reconfiguration critical section and
+    see only arithmetic — they must stay cheap and effect-free.
     """
     base: Dict[str, Any] = {
         "__builtins__": dict(_SAFE_BUILTINS),
         "math": math,
     }
-    if domain == "request":
+    if domain in ("request", "reconfig"):
         return base
     base.update({
         "schedulers": schedulers,
@@ -142,6 +151,26 @@ class RequestPolicy:
 
     def prioritize(self, rctx: Any) -> float:
         return float(self.prioritize_fn(rctx))
+
+
+@dataclass
+class ReconfigPolicy:
+    """Compiled reconfig-domain hook, handed to the serving backend.
+
+    ``migration_mode`` is called once per in-flight request on a replica
+    being removed, with a ``MigrationCtx`` duck-typed view (progress,
+    position, remaining budget); it answers drain | migrate | recompute.
+    Like request hooks it is advisory — failures fall back to drain, the
+    always-safe §5.1 behaviour.  ``may_migrate`` is a genome-derived hint:
+    when False the pool knows no slot will ever move and keeps the
+    teardown-before-build order (no both-cache-generations-live peak).
+    """
+    mode_fn: Callable[[Any], str]
+    name: str = "anon"
+    may_migrate: bool = True
+
+    def migration_mode(self, mctx: Any) -> str:
+        return str(self.mode_fn(mctx))
 
 
 @dataclass
@@ -244,6 +273,19 @@ class PolicyProgram:
         preempt = bool((self.genome or {}).get("preempt", False))
         return RequestPolicy(admit_fn, prioritize_fn, preempt=preempt,
                              name=self.name)
+
+    # --- reconfig domain ---------------------------------------------- #
+    def reconfig_policy(self) -> Optional["ReconfigPolicy"]:
+        """Compiled reconfig-domain hook, or None for programs that leave
+        reconfiguration at the backend default (synchronous drain)."""
+        if not self.implements("reconfig"):
+            return None
+        (mode_fn,) = self._hooks["reconfig"]
+        mode = (self.genome or {}).get("migration_mode")
+        # hand-written sources carry no genome hint: assume they may migrate
+        return ReconfigPolicy(mode_fn, name=self.name,
+                              may_migrate=(mode != "drain"
+                                           if mode is not None else True))
 
 
 # v1 name: every existing call-site (and raw v1 source) keeps working
@@ -387,6 +429,20 @@ def prioritize(r):
 '''
 
 
+# appended when the genome declares the reconfig domain; ``m`` is the pool's
+# MigrationCtx view of one in-flight request on a replica being removed
+_RECONFIG_SECTION = '''
+
+# --- reconfig domain (Policy API v2): live-migration choice per request -----
+
+def migration_mode(m):
+    mode = G["migration_mode"]
+    if mode == "migrate" and m.progress < G["migrate_min_progress"]:
+        return "recompute"               # little state saved: re-prefill is cheap
+    return mode
+'''
+
+
 def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgram:
     g = dict(DEFAULT_GENOME)
     g.update(genome)
@@ -396,6 +452,8 @@ def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgr
     )
     if "request" in g.get("domains", ()):
         src += _REQUEST_SECTION
+    if "reconfig" in g.get("domains", ()):
+        src += _RECONFIG_SECTION
     return PolicyProgram(source=src, genome=g, name=name)
 
 
@@ -437,5 +495,14 @@ def seed_policies() -> Dict[str, PolicyProgram]:
                       "domains": ["placement", "request"],
                       "priority_kind": "slo-aware", "slo_ttft_s": 1.0,
                       "admit_load_cap": 4.0},
+        # reconfiguration-overhead extremes (§5.1 trade-off (iii) at request
+        # granularity): carry every in-flight slot across plan changes vs
+        # block the pool until removed replicas run dry
+        "live-migrate": {"scheduler": "greedy", "trigger_kind": "always",
+                         "domains": ["placement", "reconfig"],
+                         "migration_mode": "migrate"},
+        "drain-reconfig": {"scheduler": "greedy", "trigger_kind": "always",
+                           "domains": ["placement", "reconfig"],
+                           "migration_mode": "drain"},
     }
     return {k: render_policy(v, name=k) for k, v in seeds.items()}

@@ -114,11 +114,15 @@ class DataPlane:
         self._push_request_policy(self.policy)
 
     def _push_request_policy(self, policy: Policy) -> None:
-        """Hand the program's request-domain hooks to the backend (None for
-        placement-only programs restores the backend's FIFO default)."""
-        if self.backend is not None and hasattr(self.backend,
-                                                "set_request_policy"):
+        """Hand the program's request- and reconfig-domain hooks to the
+        backend (None for programs without the domain restores the backend
+        defaults: FIFO admission, synchronous drain on reconfigure)."""
+        if self.backend is None:
+            return
+        if hasattr(self.backend, "set_request_policy"):
             self.backend.set_request_policy(policy.request_policy())
+        if hasattr(self.backend, "set_reconfig_policy"):
+            self.backend.set_reconfig_policy(policy.reconfig_policy())
 
     def maybe_hot_swap(self) -> bool:
         """Load staged policy code at a monitoring-step boundary (§6.2).

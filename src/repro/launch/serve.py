@@ -36,6 +36,10 @@ def main() -> int:
                     choices=["fifo", "sjf", "slo-aware"],
                     help="request-domain admission order (Policy API v2); "
                          "fifo keeps the v1 behaviour")
+    ap.add_argument("--reconfig", default="drain",
+                    choices=["drain", "migrate", "recompute"],
+                    help="what happens to in-flight requests when --resize "
+                         "removes their replica (reconfig domain)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -71,13 +75,33 @@ def main() -> int:
           f"{disp / max(len(done), 1):.1f}/request)")
 
     if args.resize:
+        if args.reconfig != "drain":
+            from repro.core.policy import render_policy
+            backend.set_reconfig_policy(render_policy(
+                {"domains": ["placement", "reconfig"],
+                 "migration_mode": args.reconfig},
+                name=args.reconfig).reconfig_policy())
+        # resubmit a burst so the resize happens with requests in flight
+        for r in range(args.requests, args.requests + args.slots):
+            backend.pool.submit(model, Request(
+                rid=r, prompt=[1 + (r + j) % 9 for j in range(args.prompt_len)],
+                max_new_tokens=args.max_new, arrival_time=time.monotonic()))
+        for eng in backend.pool.engines:
+            eng.step()
         plan2 = Plan((ReplicaGroup(model, "H100-80G", tp=1,
                                    batch=max(args.slots // 2, 1),
                                    count=args.replicas),))
         rep2 = backend.apply_plan(plan2, None)
-        print(f"resize: rebuilt={len(rep2.built)} reused={len(rep2.reused)} "
-              f"removed={len(rep2.removed)} drained={rep2.drained_requests} "
-              f"measured reconfig={rep2.wall_s * 1e3:.1f}ms")
+        print(f"resize[{args.reconfig}]: rebuilt={len(rep2.built)} "
+              f"reused={len(rep2.reused)} removed={len(rep2.removed)} "
+              f"drained={rep2.drained_requests} "
+              f"migrated={rep2.migrated_requests} "
+              f"recomputed={rep2.recomputed_requests} "
+              f"measured reconfig={rep2.wall_s * 1e3:.1f}ms "
+              f"(hand-off: migrate {rep2.migrate_wall_s * 1e3:.1f}ms / "
+              f"drain {rep2.drain_wall_s * 1e3:.1f}ms)")
+        done2 = backend.pool.run_until_drained()
+        print(f"post-resize: served {len(done2)} carried/queued requests")
     return 0
 
 

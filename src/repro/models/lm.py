@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import flags
@@ -496,3 +497,178 @@ def mask_cache_update(cfg: ModelConfig, old_cache: Params, new_cache: Params,
         return jnp.where(m, new, old)
 
     return jax.tree_util.tree_map_with_path(one, old_cache, new_cache)
+
+
+# --------------------------------------------------------------------------- #
+# per-slot cache migration (live KV/SSM state transfer across engines)
+# --------------------------------------------------------------------------- #
+class SlotMigrationError(ValueError):
+    """A slot state cannot be installed into the target cache — shape/config
+    mismatch, or the target buffers cannot hold the positions the request
+    still attends to."""
+
+
+def _stack_depth(key_path) -> int:
+    """Leading layer-stack dims before the batch axis (2 for hybrid group
+    SSM leaves, 1 everywhere else) — same rule as reset_slots."""
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in key_path]
+    return 2 if ("groups" in names and names[-1] in ("conv", "ssm")) else 1
+
+
+def extract_slot(cfg: ModelConfig, cache: Params, slot: int) -> Params:
+    """Slice one batch slot's KV/SSM state out of ``cache`` as a host copy.
+
+    The result mirrors the cache pytree with the batch axis removed.  Position
+    buffers keep their *absolute* positions, which lets :func:`install_slot`
+    re-derive physical buffer indices on a target whose buffer length differs
+    (rolling SWA rings are rotated by position, not copied by index).
+    """
+    def one(kp, leaf):
+        idx = (slice(None),) * _stack_depth(kp) + (slot,)
+        return np.asarray(jax.device_get(leaf[idx]))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SlotMigrationError(msg)
+
+
+def _install_copy(dst: jax.Array, src: np.ndarray, slot: int,
+                  nstack: int = 1) -> jax.Array:
+    """Position-independent state (SSM/conv recurrent state, xattn KV)."""
+    want = dst.shape[:nstack] + dst.shape[nstack + 1:]
+    _require(tuple(src.shape) == tuple(want),
+             f"state shape {tuple(src.shape)} != cache slot shape {tuple(want)}")
+    idx = (slice(None),) * nstack + (slot,)
+    return dst.at[idx].set(jnp.asarray(src, dst.dtype))
+
+
+def _install_attn(dst_leaves, src_leaves, dst_pos: jax.Array,
+                  src_pos: np.ndarray, slot: int,
+                  window: Optional[int], position: int):
+    """Scatter one slot's attention entries into the target buffers by
+    absolute position.
+
+    dst leaves: (N, B, S_dst, ...) device arrays sharing ``dst_pos``
+    (N, B, S_dst); src leaves: (N, S_src, ...) host arrays sharing
+    ``src_pos`` (N, S_src).  Non-rolling buffers index by position directly;
+    rolling (``window`` given) buffers index by ``position % S_dst`` — the
+    rotation that makes a ring portable across buffer lengths.  Entries the
+    target ring cannot hold are dropped only when the request can no longer
+    attend to them; otherwise the install is refused.
+    """
+    N, S_src = src_pos.shape
+    _require(dst_pos.shape[0] == N,
+             f"layer-stack mismatch: {dst_pos.shape[0]} != {N}")
+    S_dst = int(dst_pos.shape[2])
+    valid = src_pos >= 0
+    if window is None:
+        _require(position < S_dst,
+                 f"next decode position {position} outside target buffer "
+                 f"of length {S_dst}")
+        _require(not valid.any() or int(src_pos.max()) < S_dst,
+                 f"cached position {int(src_pos.max())} outside target "
+                 f"buffer of length {S_dst}")
+        keep = valid
+        dest = np.where(valid, src_pos, 0)
+    else:
+        keep = valid & (src_pos >= position - S_dst)
+        needed = valid & (src_pos > position - window)
+        _require(not (needed & ~keep).any(),
+                 f"target ring of length {S_dst} cannot hold the positions "
+                 f"still visible inside window {window}")
+        dest = np.where(keep, src_pos, 0) % S_dst
+    n_idx, s_idx = np.nonzero(keep)
+    d_idx = dest[n_idx, s_idx]
+
+    out = []
+    for dst, src in zip(dst_leaves, src_leaves):
+        _require(tuple(src.shape[2:]) == tuple(dst.shape[3:])
+                 and src.shape[0] == N and src.shape[1] == S_src,
+                 f"attention state shape {tuple(src.shape)} incompatible "
+                 f"with cache {tuple(dst.shape)}")
+        buf = np.zeros((N, S_dst) + tuple(dst.shape[3:]), dtype=dst.dtype)
+        buf[n_idx, d_idx] = src[n_idx, s_idx]
+        out.append(dst.at[:, slot].set(jnp.asarray(buf)))
+    posbuf = np.full((N, S_dst), -1, np.int32)
+    posbuf[n_idx, d_idx] = src_pos[n_idx, s_idx]
+    out.append(dst_pos.at[:, slot].set(jnp.asarray(posbuf)))
+    return out
+
+
+def install_slot(cfg: ModelConfig, cache: Params, slot: int, state: Params,
+                 position: int) -> Params:
+    """Install an :func:`extract_slot` state into batch slot ``slot``.
+
+    ``position`` is the request's next decode position (its cache holds
+    positions < ``position``).  The whole slot is overwritten — including
+    entries the state does not cover — so a previous occupant can never
+    leak through.  Raises :class:`SlotMigrationError` when the state cannot
+    be represented in the target cache (different architecture shapes, or a
+    buffer too short for the still-visible positions); the caller then falls
+    back to recompute-from-continuation.
+    """
+    try:
+        if cfg.family == "ssm":
+            return {"conv": _install_copy(cache["conv"], state["conv"], slot),
+                    "ssm": _install_copy(cache["ssm"], state["ssm"], slot)}
+        if cfg.family == "hybrid":
+            new = {"groups": {
+                "conv": _install_copy(cache["groups"]["conv"],
+                                      state["groups"]["conv"], slot, nstack=2),
+                "ssm": _install_copy(cache["groups"]["ssm"],
+                                     state["groups"]["ssm"], slot, nstack=2)}}
+            k, v, pos = _install_attn(
+                [cache["attn_k"], cache["attn_v"]],
+                [state["attn_k"], state["attn_v"]],
+                cache["attn_pos"], state["attn_pos"], slot, None, position)
+            new.update(attn_k=k, attn_v=v, attn_pos=pos)
+            if "tail" in cache:
+                _require("tail" in state, "state lacks the mamba tail stack")
+                new["tail"] = {
+                    "conv": _install_copy(cache["tail"]["conv"],
+                                          state["tail"]["conv"], slot),
+                    "ssm": _install_copy(cache["tail"]["ssm"],
+                                         state["tail"]["ssm"], slot)}
+            return new
+        if cfg.mla is not None:
+            ckv, pos = _install_attn([cache["ckv"]], [state["ckv"]],
+                                     cache["pos"], state["pos"], slot,
+                                     None, position)
+            return {"ckv": ckv, "pos": pos}
+        if cfg.local_global_every == 2:
+            lk, lv, lpos = _install_attn(
+                [cache["loc_k"], cache["loc_v"]],
+                [state["loc_k"], state["loc_v"]],
+                cache["loc_pos"], state["loc_pos"], slot,
+                cfg.sliding_window, position)
+            gk, gv, gpos = _install_attn(
+                [cache["glob_k"], cache["glob_v"]],
+                [state["glob_k"], state["glob_v"]],
+                cache["glob_pos"], state["glob_pos"], slot, None, position)
+            return {"loc_k": lk, "loc_v": lv, "loc_pos": lpos,
+                    "glob_k": gk, "glob_v": gv, "glob_pos": gpos}
+        if cfg.is_encoder_decoder:
+            k, v, pos = _install_attn([cache["k"], cache["v"]],
+                                      [state["k"], state["v"]],
+                                      cache["pos"], state["pos"], slot,
+                                      None, position)
+            return {"k": k, "v": v, "pos": pos,
+                    "xk": _install_copy(cache["xk"], state["xk"], slot),
+                    "xv": _install_copy(cache["xv"], state["xv"], slot)}
+        # dense / moe: a pure-SWA arch rolls its single KV buffer
+        window = (cfg.sliding_window
+                  if cfg.sliding_window is not None
+                  and cfg.local_global_every == 0 else None)
+        k, v, pos = _install_attn([cache["k"], cache["v"]],
+                                  [state["k"], state["v"]],
+                                  cache["pos"], state["pos"], slot,
+                                  window, position)
+        return {"k": k, "v": v, "pos": pos}
+    except SlotMigrationError:
+        raise
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        raise SlotMigrationError(
+            f"slot state incompatible with target cache: {e}") from e

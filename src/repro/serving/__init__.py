@@ -4,6 +4,7 @@ serving plans through."""
 from repro.serving.backend import (Backend, JaxBackend, ReconfigReport,  # noqa: F401
                                    SimBackend, make_jax_backend,
                                    measured_interval_metrics)
-from repro.serving.engine import (Engine, Request, RequestCtx,  # noqa: F401
-                                  RequestState)
-from repro.serving.pool import EnginePool, PoolDiff  # noqa: F401
+from repro.serving.engine import (Engine, MigrationCtx, Request,  # noqa: F401
+                                  RequestCtx, RequestState, SlotExport)
+from repro.serving.pool import (EnginePool, MIGRATION_MODES,  # noqa: F401
+                                PoolDiff)

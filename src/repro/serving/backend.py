@@ -25,7 +25,7 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.core.execution_model import IntervalMetrics
 from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
-from repro.core.policy import RequestPolicy
+from repro.core.policy import ReconfigPolicy, RequestPolicy
 from repro.core.simulator import Simulator
 from repro.models import lm
 from repro.serving.engine import Engine, Request
@@ -80,13 +80,25 @@ def measured_interval_metrics(done: Sequence, wall: float,
 
 @dataclass(frozen=True)
 class ReconfigReport:
-    """What applying a plan did, and what it cost."""
+    """What applying a plan did, and what it cost.
+
+    In-flight requests on removed replicas are handled per the reconfig
+    policy: ``drained_requests`` ran to completion on the old replica
+    (blocking), ``migrated_requests`` carried their live KV/SSM slot state
+    to a survivor, ``recomputed_requests`` were requeued as continuations
+    (paying re-prefill).  ``migrate_wall_s`` / ``drain_wall_s`` split the
+    measured hand-off cost out of ``wall_s``.
+    """
     wall_s: float                    # measured reconfiguration wall-clock
     simulated_s: float               # RECONFIG-COST estimate for the same diff
     built: Tuple[ReplicaGroup, ...] = ()
     reused: Tuple[ReplicaGroup, ...] = ()
     removed: Tuple[ReplicaGroup, ...] = ()
     drained_requests: int = 0
+    migrated_requests: int = 0
+    recomputed_requests: int = 0
+    migrate_wall_s: float = 0.0
+    drain_wall_s: float = 0.0
 
     @property
     def changed(self) -> bool:
@@ -110,6 +122,12 @@ class Backend(Protocol):
         of the live PolicyProgram — Policy API v2's second evolvable surface."""
         ...
 
+    def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
+        """Install (or clear, with None) the reconfig-domain hook deciding
+        drain|migrate|recompute per in-flight request on plan changes —
+        the third evolvable surface (reconfiguration-overhead axis)."""
+        ...
+
 
 # --------------------------------------------------------------------------- #
 # simulator-backed (closes the loop without hardware)
@@ -123,12 +141,17 @@ class SimBackend:
     plan: Optional[Plan] = None
     applied: List[Plan] = field(default_factory=list)
     request_policy: Optional[RequestPolicy] = None
+    reconfig_policy: Optional[ReconfigPolicy] = None
 
     def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
         # the roofline simulator has no per-request queue to reorder; the
         # hooks are recorded so tests (and future sim upgrades) can see what
         # the control plane pushed
         self.request_policy = rp
+
+    def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
+        # no live slots to migrate in the simulator; recorded for visibility
+        self.reconfig_policy = rp
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = self.sim.reconfig_cost(self.plan, plan)
@@ -188,6 +211,9 @@ class JaxBackend:
     def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
         self.pool.set_request_policy(rp)
 
+    def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
+        self.pool.set_reconfig_policy(rp)
+
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = 0.0
         if ctx is not None and ctx.simulator is not None:
@@ -196,7 +222,11 @@ class JaxBackend:
         return ReconfigReport(wall_s=diff.wall_s, simulated_s=sim_cost,
                               built=diff.built, reused=diff.reused,
                               removed=diff.removed,
-                              drained_requests=diff.drained_requests)
+                              drained_requests=diff.drained_requests,
+                              migrated_requests=diff.migrated_requests,
+                              recomputed_requests=diff.recomputed_requests,
+                              migrate_wall_s=diff.migrate_wall_s,
+                              drain_wall_s=diff.drain_wall_s)
 
     def serve_interval(self, workloads: Sequence[Workload]) -> IntervalMetrics:
         """Serve a scaled-down burst per workload model and measure."""

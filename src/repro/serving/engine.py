@@ -46,6 +46,11 @@ class Request:
     max_new_tokens: int = 16
     eos_id: int = EOS_DEFAULT
     arrival_time: float = 0.0
+    # accounting carry for continuations of preempted/migrated requests:
+    # riding on the Request itself means it survives a requeue onto ANY
+    # replica (engine-local carry maps lose it across the pool)
+    first_token_time: Optional[float] = None
+    prior_generated: int = 0     # tokens already produced in earlier lives
 
 
 @dataclass(frozen=True)
@@ -67,6 +72,25 @@ class RequestCtx:
         return self.active / max(self.n_slots, 1)
 
 
+@dataclass(frozen=True)
+class MigrationCtx:
+    """Typed view of one in-flight request at reconfiguration time — the
+    argument the reconfig-domain policy hook (``migration_mode``) receives.
+    Plain scalars only, like :class:`RequestCtx`."""
+    rid: int
+    prompt_len: int
+    generated: int                   # tokens produced so far (all lives)
+    remaining: int                   # decode budget left
+    position: int                    # next cache position
+
+    @property
+    def progress(self) -> float:
+        """Fraction of the decode budget already spent — the knob
+        ``migrate_min_progress`` thresholds on (young requests are cheap to
+        recompute; old ones carry state worth moving)."""
+        return self.generated / max(self.generated + self.remaining, 1)
+
+
 @dataclass
 class RequestState:
     request: Request
@@ -79,6 +103,24 @@ class RequestState:
     prefill_dispatches: int = 0
     prior_generated: int = 0     # tokens produced before a preemption
                                  # (folded into the continuation's prompt)
+
+
+@dataclass
+class SlotExport:
+    """One active slot packed for migration (Engine.export_active).
+
+    ``request`` is the continuation — prompt + tokens generated so far,
+    remaining budget, accounting carry — the recompute-fallback currency any
+    engine can re-prefill.  ``cache`` is the extracted device state
+    (:func:`repro.models.lm.extract_slot`) that lets a compatible engine
+    resume decoding in place, skipping the re-prefill entirely; ``state`` is
+    the live RequestState (its ``slot`` is stale until re-installed).
+    """
+    request: Request
+    state: RequestState
+    cfg: ModelConfig
+    cache: Optional[object]          # None when exported for recompute only
+    position: int
 
 
 class Engine:
@@ -96,9 +138,6 @@ class Engine:
         self.request_policy = request_policy
         self.policy_errors = 0       # request-hook failures (hooks are advisory)
         self.preemptions = 0
-        # rid -> (original first_token_time, tokens generated pre-preemption):
-        # keeps TTFT/token accounting honest across preempt-and-recompute
-        self._preempt_carry: Dict[int, Tuple[float, int]] = {}
         cache_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
         self.cache = lm.init_cache(cfg, n_slots, max_seq_len, dtype=cache_dtype)
         self.waiting: List[Request] = []
@@ -166,6 +205,10 @@ class Engine:
         return max(1, self.max_seq_len - max(max_new_tokens, 1))
 
     def submit(self, req: Request) -> None:
+        if req.arrival_time == 0.0:
+            # an unstamped arrival would make age_s/TTFT ≈ monotonic() since
+            # boot — every slo-aware genome would see a violated SLO
+            req.arrival_time = time.monotonic()
         limit = self.max_prompt_len(req.max_new_tokens)
         if len(req.prompt) > limit:
             if not self.truncate_long_prompts:
@@ -173,7 +216,8 @@ class Engine:
                     f"prompt of {len(req.prompt)} tokens exceeds engine limit "
                     f"{limit} (max_seq_len={self.max_seq_len})")
             req = Request(req.rid, req.prompt[-limit:], req.max_new_tokens,
-                          req.eos_id, req.arrival_time)
+                          req.eos_id, req.arrival_time,
+                          req.first_token_time, req.prior_generated)
         self.waiting.append(req)
 
     def free_slots(self) -> List[int]:
@@ -263,11 +307,74 @@ class Engine:
         if best_score >= worst_score:    # challenger must strictly outrank
             return
         st = self.active.pop(slot)       # slot wiped at next claim (reset path)
-        self._preempt_carry[st.request.rid] = (
-            st.first_token_time,
-            st.prior_generated + len(st.generated))
+        # the carry travels ON the continuation so TTFT/token accounting
+        # survives a requeue onto a different replica
+        proxy.first_token_time = st.first_token_time
+        proxy.prior_generated = st.prior_generated + len(st.generated)
         self.waiting.append(proxy)
         self.preemptions += 1
+
+    # ------------------------------------------------------------------ #
+    # live slot migration (cache-state transfer across engines)
+    # ------------------------------------------------------------------ #
+    def migration_ctx_for(self, st: RequestState) -> MigrationCtx:
+        req = st.request
+        return MigrationCtx(rid=req.rid, prompt_len=len(req.prompt),
+                            generated=st.prior_generated + len(st.generated),
+                            remaining=req.max_new_tokens - len(st.generated),
+                            position=st.position)
+
+    def export_slot(self, slot: int, with_state: bool = True) -> SlotExport:
+        """Pop one active request out of its slot, packed for migration.
+
+        ``with_state=False`` skips the device→host cache copy when the
+        caller already knows it will recompute (requeue the continuation).
+        """
+        st = self.active.pop(slot)
+        req = st.request
+        remaining = max(req.max_new_tokens - len(st.generated), 1)
+        cont = Request(req.rid, list(req.prompt) + list(st.generated),
+                       remaining, req.eos_id, req.arrival_time,
+                       first_token_time=st.first_token_time,
+                       prior_generated=st.prior_generated + len(st.generated))
+        cache = (lm.extract_slot(self.cfg, self.cache, slot)
+                 if with_state else None)
+        return SlotExport(cont, st, self.cfg, cache, st.position)
+
+    def export_active(self, with_state: bool = True) -> List[SlotExport]:
+        """Export every in-flight request (lowest slot first)."""
+        return [self.export_slot(s, with_state=with_state)
+                for s in sorted(self.active)]
+
+    def install_active(self, export: SlotExport) -> bool:
+        """Adopt a migrated slot directly into a free slot — no re-prefill.
+
+        Returns False (engine unchanged) when the state cannot live here:
+        no free slot, different model config, not enough decode headroom for
+        the remaining budget (step()'s position guard would silently cut the
+        request short — the same fit rule as ``max_prompt_len``), or buffer
+        shapes the extracted state cannot be scattered into.  Callers then
+        fall back to resubmitting ``export.request`` (recompute).
+        """
+        free = self.free_slots()
+        remaining = max(export.request.max_new_tokens, 1)
+        # step() retires a slot once position hits max_seq_len - 1, so the
+        # full remaining budget needs position + remaining < max_seq_len
+        # (budget completing exactly at the guard is fine)
+        if (not free or export.cache is None or export.cfg != self.cfg
+                or export.position + remaining >= self.max_seq_len):
+            return False
+        slot = free[0]
+        try:
+            cache = lm.install_slot(self.cfg, self.cache, slot,
+                                    export.cache, export.position)
+        except lm.SlotMigrationError:
+            return False
+        self.cache = cache
+        st = export.state
+        st.slot = slot
+        self.active[slot] = st
+        return True
 
     # ------------------------------------------------------------------ #
     def _prefill_into_slot(self, req: Request, slot: int) -> None:
@@ -289,9 +396,11 @@ class Engine:
             last = self._prefill_chunks(st, prompt)
         st.generated.append(last)
         st.first_token_time = time.monotonic()
-        carry = self._preempt_carry.pop(req.rid, None)
-        if carry is not None:        # continuation of a preempted request
-            st.first_token_time, st.prior_generated = carry
+        if req.first_token_time is not None:
+            # continuation of a preempted/migrated request: keep the original
+            # first-token time and the tokens produced in earlier lives
+            st.first_token_time = req.first_token_time
+        st.prior_generated = req.prior_generated
 
     def _prefill_chunks(self, st: RequestState, prompt: List[int]) -> int:
         slot = st.slot

@@ -9,9 +9,13 @@ plan, *diffs* against the current one:
   * changed/new groups are (re)built — cache re-allocation is the real
     analogue of weight reloading, and its wall-clock is the measured
     RECONFIG-COST;
-  * removed groups are drained first (outstanding requests finish; queued
-    requests are requeued onto surviving replicas of the same model) — the
-    continuous-execution constraint of §5.1.
+  * removed groups hand off their work: queued requests are requeued onto
+    surviving replicas of the same model, and each in-flight request is —
+    per the evolvable reconfig policy — **drained** (the replica blocks the
+    reconfiguration until it finishes, §5.1's continuous-execution
+    baseline), **migrated** (its live KV/SSM slot state moves to a survivor
+    and decoding resumes in place), or **recomputed** (a continuation is
+    requeued and pays the re-prefill).
 
 Requests are routed per model to the least-loaded replica (capacity-weighted
 shedding across groups).
@@ -23,20 +27,31 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.plan import Plan, ReplicaGroup
-from repro.core.policy import RequestPolicy
+from repro.core.policy import ReconfigPolicy, RequestPolicy
 from repro.serving.engine import Engine, Request, RequestState
 
 EngineFactory = Callable[[ReplicaGroup], Engine]
 
+MIGRATION_MODES = ("drain", "migrate", "recompute")
+
 
 @dataclass(frozen=True)
 class PoolDiff:
-    """Outcome of one reconfiguration, with measured wall-clock."""
+    """Outcome of one reconfiguration, with measured wall-clock.
+
+    ``wall_s`` covers the whole reconfiguration; ``migrate_wall_s`` /
+    ``drain_wall_s`` break out the in-flight hand-off so the evolution loop
+    can see where the transition cost actually went.
+    """
     built: Tuple[ReplicaGroup, ...]
     reused: Tuple[ReplicaGroup, ...]
     removed: Tuple[ReplicaGroup, ...]
     drained_requests: int
     wall_s: float
+    migrated_requests: int = 0
+    recomputed_requests: int = 0
+    migrate_wall_s: float = 0.0
+    drain_wall_s: float = 0.0
 
     @property
     def changed(self) -> bool:
@@ -54,12 +69,25 @@ class EnginePool:
         self.backlog_dropped = 0         # oldest entries shed past the cap
         self._replicas: Dict[ReplicaGroup, List[Engine]] = {}
         self.request_policy: Optional[RequestPolicy] = None
-        self.policy_errors = 0           # failing admit hooks (advisory)
+        self.reconfig_policy: Optional[ReconfigPolicy] = None
+        self.policy_errors = 0           # failing admit/reconfig hooks (advisory)
         self.plan: Optional[Plan] = None
         self.finished: List[RequestState] = []
         self.backlog: List[Tuple[str, Request]] = []   # (model, request)
         self.reconfig_count = 0
         self._retired_dispatches = 0     # counters of torn-down engines
+        self._absorbed: Dict[int, int] = {}   # id(engine) -> finished absorbed
+
+    def _absorb(self, eng: Engine) -> List[RequestState]:
+        """Move an engine's not-yet-absorbed finished records into
+        ``self.finished`` exactly once (idempotent bookkeeping — records
+        must neither vanish with a torn-down engine nor be double-counted
+        by overlapping drains)."""
+        start = self._absorbed.get(id(eng), 0)
+        done = eng.finished[start:]
+        self._absorbed[id(eng)] = len(eng.finished)
+        self.finished.extend(done)
+        return done
 
     # ------------------------------------------------------------------ #
     def engines_for(self, model: str) -> List[Engine]:
@@ -85,10 +113,31 @@ class EnginePool:
         for eng in self.engines:
             eng.request_policy = rp
 
+    def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
+        """Install the reconfig-domain hook governing what happens to
+        in-flight requests when their replica group is removed (None
+        restores the synchronous-drain default)."""
+        self.reconfig_policy = rp
+
     # ------------------------------------------------------------------ #
+    def _migration_mode(self, eng: Engine, st: RequestState) -> str:
+        """Per-request drain|migrate|recompute decision.  Advisory like every
+        evolved hook: failures and unknown answers fall back to drain, the
+        always-correct (if slowest) §5.1 behaviour."""
+        rp = self.reconfig_policy
+        if rp is None:
+            return "drain"
+        try:
+            mode = rp.migration_mode(eng.migration_ctx_for(st))
+        except Exception:  # noqa: BLE001 — evolved code must not kill serving
+            self.policy_errors += 1
+            return "drain"
+        return mode if mode in MIGRATION_MODES else "drain"
+
     def reconfigure(self, plan: Plan) -> PoolDiff:
         """Apply a new plan; rebuild only what changed.  Measured wall-clock
-        covers drain + build (the reusable groups cost nothing)."""
+        covers the in-flight hand-off (migrate/recompute/drain) + build —
+        the reusable groups cost nothing."""
         t0 = time.monotonic()
         new_groups = set(plan.groups)
         old_groups = set(self._replicas)
@@ -96,28 +145,91 @@ class EnginePool:
         added = new_groups - old_groups
         reused = old_groups & new_groups
 
-        # 1. drain shrinking groups: in-flight work finishes, queued work
-        #    is requeued on survivors of the same model (or backlogged)
-        drained = 0
+        # 1. build new/changed groups (inheriting the live request policy)
+        #    BEFORE teardown when a reconfig policy may migrate slots into
+        #    them; without one, teardown-first keeps the old peak-memory
+        #    profile (no moment where both cache generations are live)
+        def build_added() -> None:
+            for g in added:
+                n = max(1, min(g.count, self._max_replicas))
+                self._replicas[g] = [self._factory(g) for _ in range(n)]
+                for eng in self._replicas[g]:
+                    eng.request_policy = self.request_policy
+
+        build_first = (self.reconfig_policy is not None
+                       and getattr(self.reconfig_policy, "may_migrate", True))
+        if build_first:
+            build_added()
+
+        # 2. tear down removed groups: queued work is requeued; in-flight
+        #    work is migrated / requeued-for-recompute / drained per the
+        #    reconfig policy (default: drain)
+        drained = migrated = recomputed = 0
+        migrate_s = drain_s = 0.0
         requeue: List[Tuple[str, Request]] = []
         for g in removed:
+            survivors = [e for gg, engines in self._replicas.items()
+                         if gg.model == g.model and gg not in removed
+                         for e in engines]
+
+            def route_continuation(req: Request) -> bool:
+                """Hand an in-flight continuation to the least-loaded
+                survivor it FITS (submit would truncate on a too-small
+                engine — already-admitted work bypasses the ingress gate,
+                exactly as the drain path never re-gates it)."""
+                fitting = [e for e in survivors
+                           if len(req.prompt) <= e.max_prompt_len(
+                               req.max_new_tokens)]
+                if not fitting:
+                    return False
+                min(fitting,
+                    key=lambda e: e.load / max(e.n_slots, 1)).submit(req)
+                return True
+
             for eng in self._replicas[g]:
                 requeue.extend((g.model, r) for r in eng.waiting)
                 eng.waiting.clear()
-                before = len(eng.finished)
-                eng.run_until_drained()
-                done = eng.finished[before:]     # in-flight work only
-                drained += len(done)
-                self.finished.extend(done)
+                self._absorb(eng)        # records finished before this plan
+                for slot in sorted(eng.active):
+                    st = eng.active[slot]
+                    mode = self._migration_mode(eng, st)
+                    if mode == "drain":
+                        continue
+                    if mode == "migrate" and any(e.free_slots()
+                                                 for e in survivors):
+                        t1 = time.monotonic()
+                        export = eng.export_slot(slot)
+                        ok = False
+                        for tgt in sorted(
+                                (e for e in survivors if e.free_slots()),
+                                key=lambda e: e.load / max(e.n_slots, 1)):
+                            if tgt.install_active(export):
+                                ok = True
+                                break
+                        migrate_s += time.monotonic() - t1
+                        if ok:
+                            migrated += 1
+                        elif route_continuation(export.request):
+                            recomputed += 1     # incompatible target
+                        else:            # nowhere it fits losslessly: drain
+                            eng.active[slot] = export.state
+                    else:                # recompute (or migrate w/o a slot)
+                        export = eng.export_slot(slot, with_state=False)
+                        if route_continuation(export.request):
+                            recomputed += 1
+                        else:            # fits nowhere: drain in place
+                            eng.active[slot] = export.state
+                if eng.active:
+                    t1 = time.monotonic()
+                    eng.run_until_drained()
+                    drained += len(self._absorb(eng))  # in-flight work only
+                    drain_s += time.monotonic() - t1
                 self._retired_dispatches += eng.dispatches
-            del self._replicas[g]
+                self._absorbed.pop(id(eng), None)   # engine retires; its id
+            del self._replicas[g]                   # may be reused by Python
 
-        # 2. build new/changed groups (inheriting the live request policy)
-        for g in added:
-            n = max(1, min(g.count, self._max_replicas))
-            self._replicas[g] = [self._factory(g) for _ in range(n)]
-            for eng in self._replicas[g]:
-                eng.request_policy = self.request_policy
+        if not build_first:
+            build_added()
 
         # 3. route requeued + backlogged requests onto the new topology
         pending, self.backlog = requeue + self.backlog, []
@@ -127,15 +239,24 @@ class EnginePool:
 
         self.plan = plan
         self.reconfig_count += 1
-        return PoolDiff(tuple(sorted(added, key=repr)),
-                        tuple(sorted(reused, key=repr)),
-                        tuple(sorted(removed, key=repr)),
-                        drained, time.monotonic() - t0)
+        return PoolDiff(built=tuple(sorted(added, key=repr)),
+                        reused=tuple(sorted(reused, key=repr)),
+                        removed=tuple(sorted(removed, key=repr)),
+                        drained_requests=drained,
+                        wall_s=time.monotonic() - t0,
+                        migrated_requests=migrated,
+                        recomputed_requests=recomputed,
+                        migrate_wall_s=migrate_s,
+                        drain_wall_s=drain_s)
 
     # ------------------------------------------------------------------ #
     def add_backlog(self, model: str, req: Request) -> None:
         """Hold a request no current replica can take; bounded — a model the
         plans never cover must not grow memory without limit."""
+        if req.arrival_time == 0.0:
+            # backlog wait is queueing delay too: stamp on entry, not at the
+            # later submit, or age_s/TTFT lose the whole backlog stay
+            req.arrival_time = time.monotonic()
         self.backlog.append((model, req))
         if len(self.backlog) > self._backlog_cap:
             drop = len(self.backlog) - self._backlog_cap
@@ -149,6 +270,10 @@ class EnginePool:
         caller) when no replica serves the model under the current plan or
         the policy declines admission at current load; ``force`` bypasses
         the gate (drain forced-progress), never the coverage check."""
+        if req.arrival_time == 0.0:
+            # stamp before the admit gate reads age_s (an unstamped arrival
+            # reads as monotonic() seconds of queueing delay)
+            req.arrival_time = time.monotonic()
         engines = self.engines_for(model)
         if not engines:
             return False
@@ -185,13 +310,13 @@ class EnginePool:
         return False
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
-        """Step engines round-robin until all queues empty; returns newly
-        finished.  Interleaving keeps per-request timing (TTFT/TPOT) honest
+        """Step engines round-robin until all queues empty; returns every
+        finished record not yet absorbed into ``self.finished``.
+        Interleaving keeps per-request timing (TTFT/TPOT) honest
         across replicas — serial draining would charge replica B's requests
         for replica A's entire runtime.  Backlogged requests are retried as
         load drains (admission throttling releases them)."""
         engines = self.engines
-        before = {id(e): len(e.finished) for e in engines}
         taken = 0
         while taken < max_steps:
             self._flush_backlog()
@@ -205,8 +330,7 @@ class EnginePool:
             taken += 1
         done: List[RequestState] = []
         for eng in engines:
-            done.extend(eng.finished[before[id(eng)]:])
-        self.finished.extend(done)
+            done.extend(self._absorb(eng))
         return done
 
     @property

@@ -35,7 +35,12 @@ class Trace:
         return len(self.observations)
 
     def window(self, start: int, end: int) -> "Trace":
-        obs = self.observations[start:end]
+        # reindex from 0 to match SnapshotBuffer.snapshot semantics —
+        # consumers keyed on obs.idx must see the same numbering no matter
+        # which path built the trace
+        obs = tuple(TimestampObservation(i, o.time, o.workloads, o.cluster,
+                                         o.metrics)
+                    for i, o in enumerate(self.observations[start:end]))
         return Trace(f"{self.name}[{start}:{end}]", obs, self.models)
 
 

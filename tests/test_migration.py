@@ -1,0 +1,444 @@
+"""Live KV/SSM slot migration: per-slot cache export/import round-trips
+greedy-exactly across every cache family, pool reconfigurations carry
+in-flight requests without dropping/double-counting them, and the
+TTFT/token accounting survives both migration and recompute fallback."""
+import dataclasses
+import time
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import Plan, ReplicaGroup
+from repro.core.policy import render_policy, seed_policies
+from repro.models import lm
+from repro.serving.backend import measured_interval_metrics
+from repro.serving.engine import Engine, MigrationCtx, Request
+from repro.serving.pool import EnginePool
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = get_config("qwen2-1.5b").reduced()
+PARAMS = lm.init_params(CFG, KEY)
+
+_ZOO = {}
+
+
+def _zoo(arch):
+    if arch not in _ZOO:
+        cfg = get_config(arch).reduced()
+        _ZOO[arch] = (cfg, lm.init_params(cfg, KEY))
+    return _ZOO[arch]
+
+
+def _reference(cfg, params, prompt, max_new, max_seq_len=48):
+    eng = Engine(cfg, params, n_slots=2, max_seq_len=max_seq_len)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+    return eng.run_until_drained()[0].generated
+
+
+# --------------------------------------------------------------------------- #
+# slot export/import: install-then-decode ≡ never-moved decode (greedy-exact)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("arch", [
+    "qwen2-1.5b",        # dense KV (absolute-position buffer)
+    "mixtral-8x7b",      # pure-SWA rolling ring (position-rotated)
+    "gemma2-9b",         # alternating local ring / global buffers
+    "minicpm3-4b",       # MLA compressed-latent cache
+    "mamba2-1.3b",       # SSM recurrent state (position-free)
+    "zamba2-7b",         # hybrid: grouped SSM + shared-attention KV
+])
+def test_migrated_slot_decodes_greedy_identical(arch):
+    cfg, params = _zoo(arch)
+    # 23-token prompt crosses the reduced 16-token SWA ring during prefill,
+    # and decode wraps it again — the rotation path is actually exercised
+    prompt = [1 + (3 * i) % 17 for i in range(23)]
+    want = _reference(cfg, params, prompt, max_new=8)
+
+    src = Engine(cfg, params, n_slots=2, max_seq_len=48)
+    src.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=8))
+    src.step(); src.step(); src.step()          # partway through decode
+    [export] = src.export_active()
+    assert not src.active                       # state left the source engine
+
+    dst = Engine(cfg, params, n_slots=3, max_seq_len=48)
+    dst.submit(Request(rid=7, prompt=[2, 3, 4], max_new_tokens=10))
+    dst.step()                                  # occupy slot 0: the migrated
+    assert dst.install_active(export)           # slot lands at a NEW index
+    assert export.state.slot != 0
+
+    done = dst.run_until_drained()
+    got = next(d for d in done if d.request.rid == 0).generated
+    assert got == want
+
+
+def test_export_slot_builds_exact_continuation():
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64)
+    eng.submit(Request(rid=3, prompt=[5, 9, 11], max_new_tokens=6,
+                       arrival_time=123.0))
+    eng.step(); eng.step()
+    st = next(iter(eng.active.values()))
+    ft0, gen = st.first_token_time, list(st.generated)
+    [export] = eng.export_active()
+    cont = export.request
+    assert cont.rid == 3
+    assert cont.prompt == [5, 9, 11] + gen
+    assert cont.max_new_tokens == 6 - len(gen)
+    assert cont.arrival_time == 123.0
+    assert cont.first_token_time == ft0         # accounting carry travels
+    assert cont.prior_generated == len(gen)
+
+
+def test_install_rejects_mismatch_and_recompute_fallback_is_exact():
+    want = _reference(CFG, PARAMS, [5, 9, 11, 4], max_new=6, max_seq_len=64)
+    src = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64)
+    src.submit(Request(rid=0, prompt=[5, 9, 11, 4], max_new_tokens=6))
+    src.step(); src.step()
+    ft0 = next(iter(src.active.values())).first_token_time
+    [export] = src.export_active()
+
+    other_cfg = dataclasses.replace(CFG, n_layers=2)
+    other = Engine(other_cfg, lm.init_params(other_cfg, KEY), n_slots=2,
+                   max_seq_len=64)
+    assert not other.install_active(export)     # different architecture
+    tiny = Engine(CFG, PARAMS, n_slots=2, max_seq_len=4)
+    assert not tiny.install_active(export)      # no decode headroom
+    assert not tiny.active and not other.active
+
+    # recompute fallback: resubmit the continuation, greedy-exact + carried
+    dst = Engine(CFG, PARAMS, n_slots=2, max_seq_len=64)
+    dst.submit(export.request)
+    fin = dst.run_until_drained()[0]
+    assert list(fin.request.prompt[4:]) + fin.generated == want
+    assert fin.prior_generated + len(fin.generated) == 6
+    assert fin.first_token_time == ft0          # TTFT not reset by re-prefill
+    m = measured_interval_metrics(fin and [fin], wall=1.0)
+    assert m.tokens == 6                        # no token lost or re-counted
+
+
+def test_install_refuses_partial_headroom_instead_of_truncating():
+    """A target whose cache holds the current position but NOT the remaining
+    decode budget must refuse: accepting would let step()'s position guard
+    silently cut the request short (no error, missing tokens)."""
+    src = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64)
+    src.submit(Request(rid=0, prompt=[1 + i % 9 for i in range(20)],
+                       max_new_tokens=20))
+    src.step(); src.step()                      # position 22, 17 remaining
+    [export] = src.export_active()
+    assert export.position + export.request.max_new_tokens == 39
+
+    cramped = Engine(CFG, PARAMS, n_slots=1, max_seq_len=38)
+    assert not cramped.install_active(export)   # would lose ~2 tokens
+    roomy = Engine(CFG, PARAMS, n_slots=1, max_seq_len=40)
+    assert roomy.install_active(export)         # budget exactly fits
+    fin = roomy.run_until_drained()[0]
+    assert fin.prior_generated + len(fin.generated) == 20  # nothing cut
+
+
+def test_drain_only_reconfig_policy_keeps_teardown_first_order():
+    """A genome whose migration_mode is 'drain' can never move a slot, so
+    the pool must not pre-build the new groups (that would hold both cache
+    generations live for no benefit)."""
+    assert seed_policies()["drain-reconfig"].reconfig_policy().may_migrate \
+        is False
+    assert seed_policies()["live-migrate"].reconfig_policy().may_migrate \
+        is True
+
+    for mode, build_first in (("drain", False), ("migrate", True)):
+        probe = {}
+
+        def factory(g):
+            if "old" in probe:                  # building the SECOND group:
+                probe.setdefault("old_active_at_build",
+                                 len(probe["old"].active))
+            return Engine(CFG, PARAMS, n_slots=2, max_seq_len=64)
+
+        pool = EnginePool(factory)
+        pool.set_reconfig_policy(render_policy(
+            {"domains": ["placement", "reconfig"], "migration_mode": mode},
+            name=mode).reconfig_policy())
+        pool.reconfigure(Plan((G1,)))
+        pool.submit("m", Request(rid=0, prompt=[1, 2], max_new_tokens=4))
+        probe["old"] = pool.engines[0]
+        probe["old"].step()
+        pool.reconfigure(Plan((G2,)))
+        # drain-only: the old replica ran dry BEFORE the new cache was
+        # allocated (never both generations live); migrate: built first
+        assert (probe["old_active_at_build"] > 0) is build_first, mode
+        pool.run_until_drained()
+        assert sorted(s.request.rid for s in pool.finished) == [0]
+
+
+def test_lm_install_slot_raises_on_shape_mismatch():
+    cache = lm.init_cache(CFG, 2, 32)
+    state = lm.extract_slot(CFG, cache, 0)
+    small = lm.init_cache(CFG, 2, 16)
+    with pytest.raises(lm.SlotMigrationError):
+        lm.install_slot(CFG, small, 0, state, position=20)
+    other = dataclasses.replace(CFG, d_head=8)
+    with pytest.raises(lm.SlotMigrationError):
+        lm.install_slot(other, lm.init_cache(other, 2, 32), 0, state,
+                        position=4)
+
+
+# --------------------------------------------------------------------------- #
+# pool-level reconfiguration: migrate / recompute / drain
+# --------------------------------------------------------------------------- #
+G1 = ReplicaGroup("m", "H100-80G", tp=1, batch=2, count=1)
+G2 = ReplicaGroup("m", "H100-80G", tp=1, batch=3, count=1)
+
+
+def _pool(mode=None, **kw):
+    pool = EnginePool(lambda g: Engine(CFG, PARAMS,
+                                       n_slots=max(1, min(g.batch, 3)),
+                                       max_seq_len=64), **kw)
+    if mode is not None:
+        pool.set_reconfig_policy(render_policy(
+            {"domains": ["placement", "reconfig"], "migration_mode": mode},
+            name=mode).reconfig_policy())
+    return pool
+
+
+PROMPTS = {0: [5, 9, 11, 4], 1: [7, 3, 8]}
+
+
+def _load_and_snapshot(pool):
+    """Submit PROMPTS, put them in flight, return rid -> first_token_time."""
+    for rid, p in PROMPTS.items():
+        assert pool.submit("m", Request(rid=rid, prompt=list(p),
+                                        max_new_tokens=6))
+    for eng in pool.engines:
+        eng.step(); eng.step()
+    return {s.request.rid: s.first_token_time
+            for e in pool.engines for s in e.active.values()}
+
+
+def _check_outputs_and_accounting(pool, fts):
+    want = {rid: _reference(CFG, PARAMS, p, max_new=6, max_seq_len=64)
+            for rid, p in PROMPTS.items()}
+    assert sorted(s.request.rid for s in pool.finished) == [0, 1]
+    for s in pool.finished:
+        rid = s.request.rid
+        full = list(s.request.prompt[len(PROMPTS[rid]):]) + list(s.generated)
+        assert full == want[rid]
+        assert s.prior_generated + len(s.generated) == 6
+        assert s.first_token_time == fts[rid]   # TTFT carried across replicas
+    assert measured_interval_metrics(pool.finished, wall=1.0).tokens == 12
+
+
+def test_reconfigure_migrates_in_flight_requests():
+    pool = _pool("migrate")
+    pool.reconfigure(Plan((G1,)))
+    fts = _load_and_snapshot(pool)
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.migrated_requests == 2
+    assert d.drained_requests == 0 and d.recomputed_requests == 0
+    assert d.migrate_wall_s > 0.0 and d.drain_wall_s == 0.0
+    # migrated slots resumed decoding on the new replica without re-prefill
+    assert sum(len(e.active) for e in pool.engines) == 2
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+
+
+def test_reconfigure_recompute_requeues_continuations():
+    pool = _pool("recompute")
+    pool.reconfigure(Plan((G1,)))
+    fts = _load_and_snapshot(pool)
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.recomputed_requests == 2
+    assert d.migrated_requests == 0 and d.drained_requests == 0
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+
+
+def test_reconfigure_default_still_drains():
+    pool = _pool(mode=None)                     # no reconfig policy: v1 path
+    pool.reconfigure(Plan((G1,)))
+    fts = _load_and_snapshot(pool)
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.drained_requests == 2
+    assert d.migrated_requests == 0 and d.recomputed_requests == 0
+    _check_outputs_and_accounting(pool, fts)    # drained inside reconfigure
+
+
+def test_migrate_falls_back_to_recompute_on_incompatible_survivor():
+    # the plan moves the model onto a differently-shaped engine (weights and
+    # cache do not line up): install fails, the continuation is requeued and
+    # recomputed instead of blocking on a drain
+    cfg2 = dataclasses.replace(CFG, n_layers=2)
+    params2 = lm.init_params(cfg2, KEY)
+
+    def factory(g):
+        if g.batch == 2:
+            return Engine(CFG, PARAMS, n_slots=2, max_seq_len=64)
+        return Engine(cfg2, params2, n_slots=3, max_seq_len=64)
+    pool = EnginePool(factory)
+    pool.set_reconfig_policy(render_policy(
+        {"domains": ["placement", "reconfig"], "migration_mode": "migrate"},
+        name="mig").reconfig_policy())
+    pool.reconfigure(Plan((G1,)))
+    pool.submit("m", Request(rid=0, prompt=[1 + i % 9 for i in range(30)],
+                             max_new_tokens=8))
+    eng = pool.engines[0]
+    eng.step(); eng.step()
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.migrated_requests == 0 and d.recomputed_requests == 1
+    done = pool.run_until_drained()
+    assert len(done) == 1 and done[0].request.rid == 0
+    st = done[0]
+    assert st.prior_generated + len(st.generated) == 8
+
+
+def test_reconfig_under_load_drops_and_double_counts_nothing():
+    pool = _pool("migrate", max_replicas_per_group=2)
+    ga = ReplicaGroup("m", "H100-80G", tp=1, batch=2, count=2)
+    pool.reconfigure(Plan((ga,)))
+    n = 8
+    for r in range(n):                          # queued + in-flight mix
+        assert pool.submit("m", Request(rid=r, prompt=[1 + r % 7, 2, 3],
+                                        max_new_tokens=3 + r % 3))
+    for eng in pool.engines:
+        eng.step()
+    d = pool.reconfigure(Plan((G2,)))           # whole old topology replaced
+    assert d.migrated_requests > 0
+    pool.run_until_drained()
+    rids = sorted(s.request.rid for s in pool.finished)
+    assert rids == list(range(n))               # every request exactly once
+    for s in pool.finished:                     # full budget, counted once
+        assert (s.prior_generated + len(s.generated)
+                == 3 + s.request.rid % 3)
+
+
+def test_preemption_carry_travels_across_replicas():
+    """The satellite bugfix: a preempted continuation requeued onto ANOTHER
+    replica keeps its original first-token time and prior token count."""
+    rp = render_policy({"domains": ["placement", "request"],
+                        "priority_kind": "sjf", "preempt": True},
+                       name="sjf-preempt").request_policy()
+    pool = _pool(mode=None)
+    pool.set_request_policy(rp)
+    gb = ReplicaGroup("m", "H100-80G", tp=1, batch=1, count=1)
+    pool.reconfigure(Plan((gb,)))
+    pool.submit("m", Request(rid=0, prompt=[1] * 16, max_new_tokens=8))
+    eng = pool.engines[0]
+    eng.step(); eng.step()
+    ft0 = next(iter(eng.active.values())).first_token_time
+    pool.submit("m", Request(rid=1, prompt=[2] * 2, max_new_tokens=2))
+    eng.step()                                  # preempts the long job
+    assert eng.preemptions == 1
+    assert any(r.rid == 0 for r in eng.waiting)  # continuation queued
+    # remove the evicting engine's group: the continuation is requeued on a
+    # DIFFERENT replica — with engine-local carry its TTFT would reset
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.removed == (gb,)
+    pool.run_until_drained()
+    cont = next(s for s in pool.finished if s.request.rid == 0)
+    assert cont.first_token_time == ft0
+    assert cont.prior_generated + len(cont.generated) == 8
+    m = measured_interval_metrics(pool.finished, wall=1.0)
+    assert m.tokens == 8 + 2
+
+
+# --------------------------------------------------------------------------- #
+# reconfig genome domain
+# --------------------------------------------------------------------------- #
+def test_reconfig_domain_render_and_threshold():
+    pol = render_policy({"domains": ["placement", "reconfig"],
+                         "migration_mode": "migrate",
+                         "migrate_min_progress": 0.5}, name="mig")
+    pol.compile()
+    assert pol.implements("reconfig")
+    rp = pol.reconfig_policy()
+    young = MigrationCtx(rid=0, prompt_len=4, generated=1, remaining=9,
+                         position=5)
+    old = MigrationCtx(rid=0, prompt_len=4, generated=8, remaining=2,
+                       position=12)
+    assert young.progress < 0.5 < old.progress
+    assert rp.migration_mode(young) == "recompute"
+    assert rp.migration_mode(old) == "migrate"
+    # placement-only programs leave the backend at the drain default
+    assert render_policy({}).reconfig_policy() is None
+
+
+def test_seed_extremes_cover_migrate_and_drain():
+    seeds = seed_policies()
+    assert seeds["live-migrate"].implements("reconfig")
+    assert seeds["drain-reconfig"].implements("reconfig")
+    any_ctx = MigrationCtx(rid=0, prompt_len=4, generated=3, remaining=3,
+                           position=7)
+    assert (seeds["live-migrate"].reconfig_policy()
+            .migration_mode(any_ctx) == "migrate")
+    assert (seeds["drain-reconfig"].reconfig_policy()
+            .migration_mode(any_ctx) == "drain")
+
+
+def test_failing_reconfig_hook_falls_back_to_drain():
+    from repro.core.policy import Policy
+    bad = Policy(source="def migration_mode(m):\n    raise ValueError('x')\n",
+                 name="bad").compile().reconfig_policy()
+    pool = _pool(mode=None)
+    pool.set_reconfig_policy(bad)
+    pool.reconfigure(Plan((G1,)))
+    fts = _load_and_snapshot(pool)
+    d = pool.reconfigure(Plan((G2,)))
+    assert d.drained_requests == 2 and pool.policy_errors > 0
+    _check_outputs_and_accounting(pool, fts)
+
+
+def test_dataplane_pushes_reconfig_policy_to_backend():
+    from repro.core.evaluator import Evaluator
+    from repro.core.plan import HARDWARE, QWEN25_FAMILY
+    from repro.core.runtime import DataPlane, PolicyStage, SnapshotBuffer
+    from repro.core.simulator import Simulator
+    from repro.serving.backend import SimBackend
+    models = {m.name: m for m in QWEN25_FAMILY.values()}
+    sim = Simulator(models, HARDWARE)
+    ev = Evaluator(sim, models, HARDWARE, candidate_timeout_s=20.0)
+    backend = SimBackend(sim)
+    dp = DataPlane(ev, seed_policies()["live-migrate"], PolicyStage(),
+                   SnapshotBuffer(), backend=backend)
+    assert backend.reconfig_policy is not None
+    assert backend.reconfig_policy.name == "live-migrate"
+    # hot-swapping a placement-only program resets to the drain default
+    dp.stage.publish(seed_policies()["greedy-reactive"])
+    from repro.traces import volatile_workload_trace
+    dp.step(volatile_workload_trace().observations[0])
+    assert backend.reconfig_policy is None
+
+
+# --------------------------------------------------------------------------- #
+# arrival-time stamping (the age_s/TTFT ≈ monotonic()-since-boot bugfix)
+# --------------------------------------------------------------------------- #
+def test_arrival_time_stamped_at_submit():
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=48)
+    t0 = time.monotonic()
+    eng.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+    assert t0 <= eng.waiting[0].arrival_time <= time.monotonic()
+    eng.submit(Request(rid=1, prompt=[3], max_new_tokens=2,
+                       arrival_time=42.0))
+    assert eng.waiting[1].arrival_time == 42.0  # explicit stamps preserved
+    done = eng.run_until_drained()
+    m = measured_interval_metrics(
+        [d for d in done if d.request.rid == 0], wall=1.0)
+    assert 0.0 < m.ttft_s < 60.0                # not seconds-since-boot
+
+
+def test_arrival_time_stamped_at_pool_submit_before_admit_gate():
+    seen = []
+
+    class Spy:
+        preempt = False
+
+        def admit(self, rctx):
+            seen.append(rctx.age_s)
+            return True
+
+        def prioritize(self, rctx):
+            return 0.0
+
+    pool = _pool(mode=None)
+    pool.set_request_policy(Spy())
+    pool.reconfigure(Plan((G1,)))
+    assert pool.submit("m", Request(rid=0, prompt=[1], max_new_tokens=1))
+    assert seen and seen[0] < 60.0              # gate saw a sane age
+    pool.run_until_drained()

@@ -101,7 +101,8 @@ def test_unknown_domain_rejected():
 GOLDEN_GENOME_LINE = GENOME_PREFIX + (
     '{"admit_load_cap": 0.0, "allow_split": false, "batch_scheme": "pow2", '
     '"domains": ["placement", "request"], "heterogeneity_aware": true, '
-    '"intra_node_only": false, "migration_keep_threshold": 0.0, '
+    '"intra_node_only": false, "migrate_min_progress": 0.0, '
+    '"migration_keep_threshold": 0.0, "migration_mode": "drain", '
     '"min_interval": 1, "preempt": false, "priority_kind": "sjf", '
     '"reconfig_penalty": 0.0, "scheduler": "greedy", "shift_threshold": 0.3, '
     '"slo_ttft_s": 2.0, "time_budget": 2.0, "tp_floor_large": 0, '

@@ -69,6 +69,29 @@ def test_maf_cluster_schedule_table16():
     assert len(sizes) == 35
 
 
+def test_trace_window_reindexes_like_snapshot():
+    """Trace.window must renumber observations from 0 — downstream consumers
+    keyed on obs.idx saw inconsistent numbering depending on whether a trace
+    came from window() (kept original idx) or SnapshotBuffer.snapshot
+    (reindexed)."""
+    tr = volatile_workload_trace()
+    w = tr.window(3, 7)
+    assert [o.idx for o in w.observations] == [0, 1, 2, 3]
+    # only the numbering changes: payload and timestamps are preserved
+    for i, o in enumerate(w.observations):
+        src = tr.observations[3 + i]
+        assert (o.time, o.workloads, o.cluster, o.metrics) == \
+            (src.time, src.workloads, src.cluster, src.metrics)
+    # ...and it now matches what SnapshotBuffer.snapshot would produce
+    from repro.core.runtime import SnapshotBuffer
+    buf = SnapshotBuffer(capacity=16)
+    for o in tr.observations[:7]:
+        buf.record(o)
+    snap = buf.snapshot(window=4)
+    assert [o.idx for o in snap.observations] == [o.idx for o in w.observations]
+    assert [o.time for o in snap.observations] == [o.time for o in w.observations]
+
+
 def test_agentic_traces_disjoint_and_sized():
     trs = agentic_traces()
     a, b = trs["agentic-1"], trs["agentic-2"]
