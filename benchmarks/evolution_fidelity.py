@@ -1,0 +1,156 @@
+"""Evolution fidelity — the evaluation ladder measured end-to-end.
+
+Three questions, answered on ``volatile_workload_trace``:
+
+  1. **Ladder coverage** — which programs can each rung rank?  The analytic
+     screen returns infeasible for request-only programs; the shadow-replay
+     rung scores every seed finitely, and twice-evaluated candidates are
+     bit-identical (determinism).
+  2. **Guarded cycle** — one full control-plane cycle with the two-stage
+     funnel: analytic screen → shadow finalists → canary ticket → data-plane
+     commit, with the incumbent-evaluation cache and cycle skipping visible
+     in the counters.
+  3. **Rollback** — a deliberately latency-regressing request program is
+     published behind a canary ticket and must be rolled back with the
+     incumbent restored.
+
+``--smoke`` (CI) asserts (1) a request-domain seed gets finite shadow
+fitness and (3) the bad-canary rollback fires; the artifact lands in
+``benchmarks/artifacts/evolution_fidelity.json``.
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.common import emit, env, save_json
+from repro.core.evolution import EvolutionConfig
+from repro.core.policy import Policy, seed_policies
+from repro.core.runtime import (CanaryTicket, ControlPlane, DataPlane,
+                                PolicyStage, SnapshotBuffer)
+from repro.serving.shadow import (BAD_REQUEST_SOURCE, ShadowBackend,
+                                  ShadowReplayEval)
+from repro.traces import volatile_workload_trace
+
+LADDER_SEEDS = ("greedy-reactive", "sjf-request", "slo-guard",
+                "request-only-slo", "live-migrate", "drain-reconfig")
+
+
+def ladder_table(ev, shadow, trace, rows, payload) -> None:
+    seeds = seed_policies()
+    table = {}
+    for name in LADDER_SEEDS:
+        a = ev.evaluate(seeds[name], trace)
+        s = shadow.evaluate(seeds[name], trace)
+        table[name] = {
+            "analytic": a.artifact_feedback(),
+            "shadow": s.artifact_feedback(),
+            "analytic_valid": a.valid, "shadow_valid": s.valid,
+        }
+        rows.append((f"fidelity/ladder/{name}", s.wall_s * 1e6,
+                     f"analytic={'inf' if not a.valid else f'{a.fitness:.1f}'} "
+                     f"shadow={s.fitness:.1f} p95={s.ttft_p95_s * 1e3:.1f}ms "
+                     f"backlog={s.backlogged}"))
+    payload["ladder"] = table
+    # (a) request-domain programs are first-class fitness citizens in shadow
+    assert table["request-only-slo"]["shadow_valid"], \
+        "request-only seed must receive finite shadow fitness"
+    assert not table["request-only-slo"]["analytic_valid"]
+    assert table["sjf-request"]["shadow_valid"]
+    # determinism: replaying the same (policy, snapshot, seed) is bit-equal
+    r1 = shadow.evaluate(seeds["sjf-request"], trace)
+    r2 = shadow.evaluate(seeds["sjf-request"], trace)
+    payload["deterministic"] = (r1.fitness == r2.fitness)
+    assert payload["deterministic"], (r1.fitness, r2.fitness)
+    rows.append(("fidelity/determinism", 0.0,
+                 f"two shadow replays identical: fit={r1.fitness:.4f}"))
+
+
+def guarded_cycle(sim, ev, shadow, trace, rows, payload, iters) -> None:
+    stage = PolicyStage()
+    buf = SnapshotBuffer()
+    for obs in trace.observations:
+        buf.record(obs)
+    cp = ControlPlane(ev, stage, buf,
+                      EvolutionConfig(max_iterations=iters, patience=iters,
+                                      evolution_timeout_s=60, seed=0,
+                                      shadow_top_k=3),
+                      window=len(trace), shadow=shadow, canary_intervals=2)
+    incumbent = seed_policies()["greedy-reactive"]
+    state = cp.run_cycle(incumbent)
+    skipped_probe = cp.run_cycle(incumbent)          # no new obs → skipped
+    backend = ShadowBackend(sim, seed=1)
+    dp = DataPlane(ev, incumbent, stage, buf, backend=backend)
+    outcome = None
+    for obs in trace.observations[:4]:
+        out = dp.step(obs)
+        if out["canary"] and out["canary"]["status"] != "running":
+            outcome = out["canary"]
+    payload["guarded_cycle"] = {
+        "cycles": cp.cycles, "skipped_cycles": cp.skipped_cycles,
+        "published": cp.published,
+        "shadow_evals": state.shadow_evals if state else 0,
+        "shadow_best": (state.shadow_best.policy.name
+                        if state and state.shadow_best else None),
+        "shadow_best_fitness": (state.shadow_best.fitness
+                                if state and state.shadow_best else None),
+        "incumbent_cache_hits": cp.incumbent_cache_hits,
+        "canary_outcome": outcome,
+        "data_plane": {"swaps": dp.swap_count, "commits": dp.commits,
+                       "rollbacks": dp.rollbacks},
+    }
+    assert skipped_probe is None and cp.skipped_cycles == 1
+    rows.append(("fidelity/guarded_cycle", 0.0,
+                 f"published={cp.published} shadow_evals="
+                 f"{payload['guarded_cycle']['shadow_evals']} "
+                 f"best={payload['guarded_cycle']['shadow_best']} "
+                 f"outcome={outcome['status'] if outcome else 'none'}"))
+
+
+def rollback_demo(sim, ev, trace, rows, payload) -> None:
+    stage = PolicyStage()
+    backend = ShadowBackend(sim, seed=0)
+    dp = DataPlane(ev, seed_policies()["greedy-reactive"], stage,
+                   SnapshotBuffer(), backend=backend)
+    dp.step(trace.observations[0])
+    dp.step(trace.observations[1])                    # incumbent baseline
+    stage.publish(Policy(source=BAD_REQUEST_SOURCE, name="regressor"),
+                  ticket=CanaryTicket(intervals=2, max_regression=0.5,
+                                      policy_name="regressor"))
+    dp.step(trace.observations[2])
+    out = dp.step(trace.observations[3])
+    payload["rollback_demo"] = {
+        "status": out["canary"]["status"] if out["canary"] else None,
+        "reason": (out["canary"] or {}).get("reason"),
+        "rollbacks": dp.rollbacks,
+        "incumbent_restored": dp.policy.name == "greedy-reactive",
+        "hooks_restored": backend.pool.request_policy is None,
+    }
+    # (b) the planted regression must be caught and rolled back
+    assert payload["rollback_demo"]["status"] == "rolled_back", \
+        payload["rollback_demo"]
+    assert payload["rollback_demo"]["incumbent_restored"]
+    assert payload["rollback_demo"]["hooks_restored"]
+    rows.append(("fidelity/rollback", 0.0,
+                 f"rolled_back reason={payload['rollback_demo']['reason']}"))
+
+
+def run(smoke: bool = False) -> list:
+    rows: list = []
+    payload: dict = {"smoke": smoke}
+    sim, ev = env()
+    trace = volatile_workload_trace()
+    window = trace.window(0, 5) if smoke else trace
+    shadow = ShadowReplayEval(sim, ev.models, ev.hardware,
+                              candidate_timeout_s=20.0)
+
+    ladder_table(ev, shadow, window, rows, payload)
+    guarded_cycle(sim, ev, shadow, window, rows, payload,
+                  iters=2 if smoke else 12)
+    rollback_demo(sim, ev, trace, rows, payload)
+
+    save_json("evolution_fidelity", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(smoke="--smoke" in sys.argv))

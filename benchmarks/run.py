@@ -19,6 +19,7 @@ MODULES = [
     ("fig9", "benchmarks.warmstart"),
     ("fig7", "benchmarks.end_to_end"),
     ("appG", "benchmarks.policy_deepdive"),
+    ("fidelity", "benchmarks.evolution_fidelity"),
     ("kernels", "benchmarks.kernels_micro"),
     ("roofline", "benchmarks.roofline"),
     ("engine", "benchmarks.serving_engine"),

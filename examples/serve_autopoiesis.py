@@ -20,6 +20,7 @@ from repro.core.policy import seed_policies
 from repro.core.runtime import Autopoiesis
 from repro.core.simulator import Simulator
 from repro.serving.backend import make_jax_backend
+from repro.serving.shadow import ShadowReplayEval
 from repro.traces import volatile_workload_trace
 
 
@@ -35,10 +36,16 @@ def main():
     models = {m.name: m for m in QWEN25_FAMILY.values()}
     sim = Simulator(models, HARDWARE)
     evaluator = Evaluator(sim, models, HARDWARE)
+    # evaluation ladder rung 2: deterministic shadow replay, so request- and
+    # reconfig-domain candidates are fitness-ranked before reaching serving,
+    # and every publish is canaried against the incumbent's trailing window
+    shadow = ShadowReplayEval(sim, models, HARDWARE, candidate_timeout_s=20.0)
     ap = Autopoiesis(evaluator, seed_policies()["sjf-request"],
                      EvolutionConfig(max_iterations=10, patience=10,
-                                     evolution_timeout_s=45, seed=0),
-                     window=8, evolve_every=3, backend=backend)
+                                     evolution_timeout_s=45, seed=0,
+                                     shadow_top_k=3),
+                     window=8, evolve_every=3, backend=backend,
+                     shadow=shadow, canary_intervals=2)
     # blend measured reconfiguration wall-clock AND request-level tail
     # latency/backlog into the fitness accounting
     ap.data_plane.acc.measured_blend = 0.25
@@ -59,6 +66,10 @@ def main():
         swapped_since_cycle = swapped_since_cycle or out["hot_swapped"]
         line = (f"  step {i}: rescheduled={out['rescheduled']} "
                 f"interval={out['interval_total']:.1f}s{flag}")
+        if out["canary"] is not None:
+            c = out["canary"]
+            line += (f"\n    [canary] {c['candidate']}: {c['status']}"
+                     + (f" — {c['reason']}" if c.get("reason") else ""))
         if rep is not None and rep.changed:
             who = " evolved-policy" if swapped_since_cycle else " seed-policy"
             line += (f"\n    [pool]{who} reconfig: built={len(rep.built)} "
@@ -83,7 +94,12 @@ def main():
     measured_recs = [r for r in acc.records if r.measured_reconfig_s > 0]
     print(f"\nT_total={acc.T_total:.1f}s  N={acc.N}  "
           f"policy swaps={ap.data_plane.swap_count}  "
-          f"evolution cycles={ap.control_plane.cycles}")
+          f"evolution cycles={ap.control_plane.cycles} "
+          f"(skipped={ap.control_plane.skipped_cycles}, "
+          f"shadow finalists ranked per cycle)")
+    print(f"guarded rollout: commits={ap.data_plane.commits} "
+          f"rollbacks={ap.data_plane.rollbacks} "
+          f"{ap.data_plane.rollback_reasons}")
     print(f"pool: {backend.pool.reconfig_count} reconfigurations, "
           f"{len(measured_recs)} interval records carry measured reconfig "
           f"wall-clock (Σ={acc.sum_measured_reconfig * 1e3:.1f}ms), "

@@ -176,3 +176,66 @@ class ExecutionAccumulator:
     @property
     def sum_measured_reconfig(self) -> float:
         return sum(r.measured_reconfig_s for r in self.records)
+
+    @property
+    def sum_backlogged(self) -> int:
+        return sum(r.metrics.backlogged for r in self.records
+                   if r.metrics is not None and r.metrics.measured)
+
+
+# --------------------------------------------------------------------------- #
+# canary window comparison (guarded rollout)
+# --------------------------------------------------------------------------- #
+def _weighted_p95(metrics: List[IntervalMetrics]) -> float:
+    reqs = sum(m.requests for m in metrics)
+    if reqs <= 0:
+        return 0.0
+    return sum(m.ttft_p95_s * m.requests for m in metrics) / reqs
+
+
+def canary_regression(candidate: List[IntervalRecord],
+                      baseline: List[IntervalRecord],
+                      max_regression: float = 0.5) -> Optional[str]:
+    """Did the candidate's canary window regress against the incumbent's
+    trailing window?  Returns a human-readable reason (→ rollback), or None
+    when the candidate holds (→ commit).
+
+    Measured windows compare on request-level quality: request-weighted p95
+    TTFT and backlog.  Interval totals are compared *normalised by
+    ``serve_full``* (the interval's full-efficiency serving cost), so the
+    ratio tracks policy-induced overhead rather than workload swings — the
+    two windows almost never carry the same workload phases.
+
+    An empty window on either side is no basis for a verdict: commit (the
+    staged policy already won its evaluation-ladder comparison).
+    """
+    if not candidate or not baseline:
+        return None
+    tol = 1.0 + max(max_regression, 0.0)
+    c_m = [r.metrics for r in candidate
+           if r.metrics is not None and r.metrics.measured]
+    b_m = [r.metrics for r in baseline
+           if r.metrics is not None and r.metrics.measured]
+    if c_m and b_m:
+        c_p95, b_p95 = _weighted_p95(c_m), _weighted_p95(b_m)
+        if b_p95 > 0.0 and c_p95 > b_p95 * tol:
+            return (f"p95 TTFT {c_p95:.4f}s vs incumbent {b_p95:.4f}s "
+                    f"(>{tol:.2f}x)")
+        # per-interval rates: the two windows may have different lengths
+        c_bk = sum(m.backlogged for m in c_m) / len(c_m)
+        b_bk = sum(m.backlogged for m in b_m) / len(b_m)
+        # one stray backlogged request per interval is noise, a pile is not
+        if c_bk > max(b_bk * tol, b_bk + 1.0):
+            return (f"backlog {c_bk:.1f}/interval vs incumbent "
+                    f"{b_bk:.1f}/interval")
+
+    def overhead_ratio(recs: List[IntervalRecord]) -> float:
+        vals = [r.total / max(r.serve_full, 1e-9)
+                for r in recs if r.serve_full > 0]
+        return sum(vals) / len(vals) if vals else 0.0
+
+    c_eff, b_eff = overhead_ratio(candidate), overhead_ratio(baseline)
+    if b_eff > 0.0 and c_eff > b_eff * tol:
+        return (f"interval cost {c_eff:.2f}x full-efficiency vs incumbent "
+                f"{b_eff:.2f}x (>{tol:.2f}x)")
+    return None

@@ -491,6 +491,12 @@ def seed_policies() -> Dict[str, PolicyProgram]:
         "sjf-request": {"scheduler": "greedy", "trigger_kind": "always",
                         "domains": ["placement", "request"],
                         "priority_kind": "sjf"},
+        # a TRUE request-only program: no placement domain at all — it rides
+        # alongside whatever placement policy is live.  The analytic rung
+        # cannot rank it; the shadow-replay rung can (evaluation ladder)
+        "request-only-slo": {"domains": ["request"],
+                             "priority_kind": "slo-aware", "slo_ttft_s": 1.0,
+                             "admit_load_cap": 6.0},
         "slo-guard": {"scheduler": "greedy", "trigger_kind": "always",
                       "domains": ["placement", "request"],
                       "priority_kind": "slo-aware", "slo_ttft_s": 1.0,

@@ -6,6 +6,12 @@ single-dispatch decode).  A batch of synthetic requests is routed across the
 replicas; ``--resize`` then applies a second plan with a different
 per-replica batch to demonstrate a measured (wall-clock) reconfiguration —
 unchanged groups keep their warm engines.
+
+``--guarded`` additionally demonstrates the control plane's guarded
+rollout: one evolution cycle through the evaluation ladder (analytic
+screen → shadow replay), a canary-ticketed publish, and a planted
+regression that is caught and rolled back — commit/rollback counts and
+reasons are printed.
 """
 from __future__ import annotations
 
@@ -19,6 +25,59 @@ from repro.core.plan import Plan, ReplicaGroup
 from repro.models import lm
 from repro.serving.backend import JaxBackend
 from repro.serving.engine import Request
+
+def guarded_demo() -> None:
+    """Evaluation ladder + canary/rollback on the deterministic shadow
+    data plane (no JAX engines involved — runs in seconds)."""
+    from repro.core.evaluator import Evaluator
+    from repro.core.evolution import EvolutionConfig
+    from repro.core.plan import HARDWARE, QWEN25_FAMILY
+    from repro.core.policy import Policy, seed_policies
+    from repro.core.runtime import (Autopoiesis, CanaryTicket)
+    from repro.core.simulator import Simulator
+    from repro.serving.shadow import (BAD_REQUEST_SOURCE, ShadowBackend,
+                                      ShadowReplayEval)
+    from repro.traces import volatile_workload_trace
+
+    models = {m.name: m for m in QWEN25_FAMILY.values()}
+    sim = Simulator(models, HARDWARE)
+    ev = Evaluator(sim, models, HARDWARE)
+    ap = Autopoiesis(
+        ev, seed_policies()["greedy-reactive"],
+        EvolutionConfig(max_iterations=4, patience=4,
+                        evolution_timeout_s=45, shadow_top_k=3, seed=0),
+        window=6, evolve_every=3,
+        backend=ShadowBackend(sim, seed=0),
+        shadow=ShadowReplayEval(sim, models, HARDWARE,
+                                candidate_timeout_s=20.0))
+    trace = volatile_workload_trace()
+    print("guarded evolution over the volatile trace "
+          "(shadow data plane, virtual clock):")
+    for i, obs in enumerate(trace.observations):
+        out = ap.data_plane.step(obs)
+        c = out["canary"]
+        if c is not None:
+            print(f"  step {i}: canary[{c['candidate']}] {c['status']}"
+                  + (f" — {c['reason']}" if c.get("reason") else ""))
+        if i > 0 and i % 3 == 0:
+            ap.control_plane.run_cycle(ap.data_plane.policy)
+    # plant a regression: it must be canaried and rolled back, not committed
+    ap.stage.publish(Policy(source=BAD_REQUEST_SOURCE, name="regressor"),
+                     ticket=CanaryTicket(intervals=2, max_regression=0.5,
+                                         policy_name="regressor"))
+    for i, obs in enumerate(trace.observations[:3]):
+        out = ap.data_plane.step(obs)
+        c = out["canary"]
+        if c is not None and c["status"] != "running":
+            print(f"  planted regressor: {c['status']}"
+                  + (f" — {c['reason']}" if c.get("reason") else ""))
+    cp, dp = ap.control_plane, ap.data_plane
+    print(f"control plane: cycles={cp.cycles} skipped={cp.skipped_cycles} "
+          f"published={cp.published} cache_hits={cp.incumbent_cache_hits}")
+    print(f"data plane: swaps={dp.swap_count} commits={dp.commits} "
+          f"rollbacks={dp.rollbacks}")
+    for reason in dp.rollback_reasons:
+        print(f"  rollback: {reason}")
 
 
 def main() -> int:
@@ -40,7 +99,14 @@ def main() -> int:
                     choices=["drain", "migrate", "recompute"],
                     help="what happens to in-flight requests when --resize "
                          "removes their replica (reconfig domain)")
+    ap.add_argument("--guarded", action="store_true",
+                    help="demonstrate the evaluation ladder + canary "
+                         "rollout/rollback on the shadow data plane")
     args = ap.parse_args()
+
+    if args.guarded:
+        guarded_demo()
+        return 0
 
     cfg = get_config(args.arch).reduced()
     params = lm.init_params(cfg, jax.random.PRNGKey(0))

@@ -8,3 +8,5 @@ from repro.serving.engine import (Engine, MigrationCtx, Request,  # noqa: F401
                                   RequestCtx, RequestState, SlotExport)
 from repro.serving.pool import (EnginePool, MIGRATION_MODES,  # noqa: F401
                                 PoolDiff)
+from repro.serving.shadow import (ShadowBackend, ShadowEngine,  # noqa: F401
+                                  ShadowReplayEval)

@@ -10,8 +10,12 @@ evolution loop:
   * :class:`JaxBackend` — a real multi-replica :class:`EnginePool` over the
     JAX engines.  ``apply_plan`` measures actual rebuild wall-clock;
     ``serve_interval`` runs real requests and measures TTFT/TPOT/tok/s.
+  * :class:`repro.serving.shadow.ShadowBackend` — a deterministic,
+    virtually-clocked EnginePool of roofline-costed shadow engines; the
+    vehicle for the evaluation ladder's shadow-replay rung and for
+    reproducible canary tests.
 
-Both satisfy the same two-method protocol, so DataPlane.step is agnostic.
+All satisfy the same protocol, so DataPlane.step is agnostic.
 """
 from __future__ import annotations
 

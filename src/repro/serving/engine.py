@@ -123,7 +123,114 @@ class SlotExport:
     position: int
 
 
-class Engine:
+class RequestSchedulingMixin:
+    """Request-domain policy dispatch (Policy API v2) shared by the
+    production :class:`Engine` and the shadow-replay twin
+    (:class:`repro.serving.shadow.ShadowEngine`) — ONE implementation of
+    admission ordering, preemption, and hook-context construction, so the
+    evaluation ladder's fidelity contract cannot drift from live serving.
+
+    Host requirements: ``waiting``, ``active``, ``n_slots``,
+    ``request_policy``, ``policy_errors``, ``preemptions``,
+    ``max_prompt_len``; ``_now`` supplies the clock (wall for the real
+    engine, virtual for the shadow).
+    """
+
+    def _now(self) -> float:
+        return time.monotonic()
+
+    def request_ctx_for(self, req: Request,
+                        now: Optional[float] = None) -> RequestCtx:
+        now = self._now() if now is None else now
+        return RequestCtx(rid=req.rid, prompt_len=len(req.prompt),
+                          max_new_tokens=req.max_new_tokens,
+                          age_s=max(now - req.arrival_time, 0.0),
+                          queue_depth=len(self.waiting),
+                          active=len(self.active), n_slots=self.n_slots)
+
+    def migration_ctx_for(self, st: RequestState) -> MigrationCtx:
+        req = st.request
+        return MigrationCtx(rid=req.rid, prompt_len=len(req.prompt),
+                            generated=st.prior_generated + len(st.generated),
+                            remaining=req.max_new_tokens - len(st.generated),
+                            position=st.position)
+
+    def _score(self, req: Request, now: float) -> float:
+        """Priority score (lower runs first).  The ``admit`` gate is NOT
+        consulted here: work in ``waiting`` is already accepted, and a
+        load-cap admit is self-referential at slot admission (the candidate
+        counts itself in queue_depth, so deferring can never satisfy the
+        cap) — ``admit`` gates ingress at EnginePool.submit instead.  Hook
+        failures are advisory, never fatal: the request falls back to
+        FIFO-neutral priority and serving continues."""
+        rp = self.request_policy
+        if rp is None:
+            return 0.0
+        try:
+            return rp.prioritize(self.request_ctx_for(req, now))
+        except Exception:  # noqa: BLE001 — evolved code must not kill serving
+            self.policy_errors += 1
+            return 0.0
+
+    def _select_admissions(self, n: int) -> List[Request]:
+        """Pick up to ``n`` waiting requests to admit now.  Without a request
+        policy this is exactly the v1 FIFO pop; with one, ``prioritize``
+        orders the queue (ties break FIFO)."""
+        if n <= 0 or not self.waiting:
+            return []                    # full house: don't score the queue
+        if self.request_policy is None:
+            take, self.waiting = self.waiting[:n], self.waiting[n:]
+            return take
+        now = self._now()
+        scored = sorted((self._score(req, now), i)
+                        for i, req in enumerate(self.waiting))
+        picked = sorted(i for _, i in scored[:n])
+        out = [self.waiting[i] for i in picked]
+        for i in reversed(picked):
+            del self.waiting[i]
+        return out
+
+    def _maybe_preempt(self) -> None:
+        """Policy-gated preemption: when every slot is busy and a waiting
+        request outranks the worst-priority running one, evict the victim.
+        Its progress is folded into a continuation request (prompt = original
+        prompt + tokens generated so far) so greedy decoding resumes exactly;
+        the victim's KV/SSM state is re-prefilled on re-admission — the
+        recompute-on-preempt trade every vLLM-style engine makes."""
+        rp = self.request_policy
+        if (rp is None or not rp.preempt or not self.waiting
+                or len(self.active) < self.n_slots):
+            return
+        now = self._now()
+        # rank by prioritize alone: the admit gate answers "may this start
+        # now", which would both veto challengers at exactly the saturation
+        # preemption exists for and shield unadmittable victims
+        best_score = min(self._score(req, now) for req in self.waiting)
+        victims = []
+        for slot, st in self.active.items():
+            req = st.request
+            remaining = req.max_new_tokens - len(st.generated)
+            cont_prompt = list(req.prompt) + list(st.generated)
+            if remaining < 1 or len(cont_prompt) > self.max_prompt_len(remaining):
+                continue                 # nearly done / would not fit: keep it
+            proxy = Request(req.rid, cont_prompt, remaining, req.eos_id,
+                            req.arrival_time)
+            victims.append((self._score(proxy, now), slot, proxy))
+        if not victims:
+            return
+        worst_score, slot, proxy = max(victims, key=lambda v: v[0])
+        if best_score >= worst_score:    # challenger must strictly outrank
+            return
+        st = self.active.pop(slot)       # slot wiped at next claim (reset path)
+        # the carry travels ON the continuation so TTFT/token accounting
+        # survives a requeue onto a different replica
+        proxy.first_token_time = st.first_token_time
+        proxy.prior_generated = st.prior_generated + len(st.generated)
+        self.waiting.append(proxy)
+        self.preemptions += 1
+
+
+class Engine(RequestSchedulingMixin):
     def __init__(self, cfg: ModelConfig, params, n_slots: int = 4,
                  max_seq_len: int = 256, greedy: bool = True,
                  chunked_prefill: bool = True, max_prefill_chunk: int = 64,
@@ -228,102 +335,13 @@ class Engine:
         """Outstanding work: queued + in-flight requests (pool routing key)."""
         return len(self.waiting) + len(self.active)
 
-    # ------------------------------------------------------------------ #
-    # request-domain policy dispatch (Policy API v2)
-    # ------------------------------------------------------------------ #
-    def request_ctx_for(self, req: Request,
-                        now: Optional[float] = None) -> RequestCtx:
-        now = time.monotonic() if now is None else now
-        return RequestCtx(rid=req.rid, prompt_len=len(req.prompt),
-                          max_new_tokens=req.max_new_tokens,
-                          age_s=max(now - req.arrival_time, 0.0),
-                          queue_depth=len(self.waiting),
-                          active=len(self.active), n_slots=self.n_slots)
-
-    def _score(self, req: Request, now: float) -> float:
-        """Priority score (lower runs first).  The ``admit`` gate is NOT
-        consulted here: work in ``waiting`` is already accepted, and a
-        load-cap admit is self-referential at slot admission (the candidate
-        counts itself in queue_depth, so deferring can never satisfy the
-        cap) — ``admit`` gates ingress at EnginePool.submit instead.  Hook
-        failures are advisory, never fatal: the request falls back to
-        FIFO-neutral priority and serving continues."""
-        rp = self.request_policy
-        if rp is None:
-            return 0.0
-        try:
-            return rp.prioritize(self.request_ctx_for(req, now))
-        except Exception:  # noqa: BLE001 — evolved code must not kill serving
-            self.policy_errors += 1
-            return 0.0
-
-    def _select_admissions(self, n: int) -> List[Request]:
-        """Pick up to ``n`` waiting requests to admit now.  Without a request
-        policy this is exactly the v1 FIFO pop; with one, ``prioritize``
-        orders the queue (ties break FIFO)."""
-        if n <= 0 or not self.waiting:
-            return []                    # full house: don't score the queue
-        if self.request_policy is None:
-            take, self.waiting = self.waiting[:n], self.waiting[n:]
-            return take
-        now = time.monotonic()
-        scored = sorted((self._score(req, now), i)
-                        for i, req in enumerate(self.waiting))
-        picked = sorted(i for _, i in scored[:n])
-        out = [self.waiting[i] for i in picked]
-        for i in reversed(picked):
-            del self.waiting[i]
-        return out
-
-    def _maybe_preempt(self) -> None:
-        """Policy-gated preemption: when every slot is busy and a waiting
-        request outranks the worst-priority running one, evict the victim.
-        Its progress is folded into a continuation request (prompt = original
-        prompt + tokens generated so far) so greedy decoding resumes exactly;
-        the victim's KV/SSM state is re-prefilled on re-admission — the
-        recompute-on-preempt trade every vLLM-style engine makes."""
-        rp = self.request_policy
-        if (rp is None or not rp.preempt or not self.waiting
-                or len(self.active) < self.n_slots):
-            return
-        now = time.monotonic()
-        # rank by prioritize alone: the admit gate answers "may this start
-        # now", which would both veto challengers at exactly the saturation
-        # preemption exists for and shield unadmittable victims
-        best_score = min(self._score(req, now) for req in self.waiting)
-        victims = []
-        for slot, st in self.active.items():
-            req = st.request
-            remaining = req.max_new_tokens - len(st.generated)
-            cont_prompt = list(req.prompt) + list(st.generated)
-            if remaining < 1 or len(cont_prompt) > self.max_prompt_len(remaining):
-                continue                 # nearly done / would not fit: keep it
-            proxy = Request(req.rid, cont_prompt, remaining, req.eos_id,
-                            req.arrival_time)
-            victims.append((self._score(proxy, now), slot, proxy))
-        if not victims:
-            return
-        worst_score, slot, proxy = max(victims, key=lambda v: v[0])
-        if best_score >= worst_score:    # challenger must strictly outrank
-            return
-        st = self.active.pop(slot)       # slot wiped at next claim (reset path)
-        # the carry travels ON the continuation so TTFT/token accounting
-        # survives a requeue onto a different replica
-        proxy.first_token_time = st.first_token_time
-        proxy.prior_generated = st.prior_generated + len(st.generated)
-        self.waiting.append(proxy)
-        self.preemptions += 1
+    # request-domain policy dispatch (request_ctx_for/_score/
+    # _select_admissions/_maybe_preempt/migration_ctx_for) is inherited
+    # from RequestSchedulingMixin — shared verbatim with the shadow twin
 
     # ------------------------------------------------------------------ #
     # live slot migration (cache-state transfer across engines)
     # ------------------------------------------------------------------ #
-    def migration_ctx_for(self, st: RequestState) -> MigrationCtx:
-        req = st.request
-        return MigrationCtx(rid=req.rid, prompt_len=len(req.prompt),
-                            generated=st.prior_generated + len(st.generated),
-                            remaining=req.max_new_tokens - len(st.generated),
-                            position=st.position)
-
     def export_slot(self, slot: int, with_state: bool = True) -> SlotExport:
         """Pop one active request out of its slot, packed for migration.
 

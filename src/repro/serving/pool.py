@@ -62,10 +62,14 @@ class EnginePool:
     """Replica engines keyed by their (hashable, frozen) ReplicaGroup."""
 
     def __init__(self, factory: EngineFactory, max_replicas_per_group: int = 2,
-                 backlog_cap: int = 256):
+                 backlog_cap: int = 256,
+                 now_fn: Callable[[], float] = time.monotonic):
         self._factory = factory
         self._max_replicas = max_replicas_per_group
         self._backlog_cap = backlog_cap
+        # arrival-stamping clock; a virtually-clocked shadow pool injects its
+        # deterministic clock so queueing delay never reads the host's
+        self._now = now_fn
         self.backlog_dropped = 0         # oldest entries shed past the cap
         self._replicas: Dict[ReplicaGroup, List[Engine]] = {}
         self.request_policy: Optional[RequestPolicy] = None
@@ -150,7 +154,10 @@ class EnginePool:
         #    them; without one, teardown-first keeps the old peak-memory
         #    profile (no moment where both cache generations are live)
         def build_added() -> None:
-            for g in added:
+            # sorted: replica construction (and thus routing/dict) order must
+            # not depend on set-iteration order — shadow replay needs two
+            # identical reconfigurations to build identical pools
+            for g in sorted(added, key=repr):
                 n = max(1, min(g.count, self._max_replicas))
                 self._replicas[g] = [self._factory(g) for _ in range(n)]
                 for eng in self._replicas[g]:
@@ -167,7 +174,7 @@ class EnginePool:
         drained = migrated = recomputed = 0
         migrate_s = drain_s = 0.0
         requeue: List[Tuple[str, Request]] = []
-        for g in removed:
+        for g in sorted(removed, key=repr):   # deterministic teardown order
             survivors = [e for gg, engines in self._replicas.items()
                          if gg.model == g.model and gg not in removed
                          for e in engines]
@@ -256,7 +263,7 @@ class EnginePool:
         if req.arrival_time == 0.0:
             # backlog wait is queueing delay too: stamp on entry, not at the
             # later submit, or age_s/TTFT lose the whole backlog stay
-            req.arrival_time = time.monotonic()
+            req.arrival_time = self._now()
         self.backlog.append((model, req))
         if len(self.backlog) > self._backlog_cap:
             drop = len(self.backlog) - self._backlog_cap
@@ -273,7 +280,7 @@ class EnginePool:
         if req.arrival_time == 0.0:
             # stamp before the admit gate reads age_s (an unstamped arrival
             # reads as monotonic() seconds of queueing delay)
-            req.arrival_time = time.monotonic()
+            req.arrival_time = self._now()
         engines = self.engines_for(model)
         if not engines:
             return False

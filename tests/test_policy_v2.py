@@ -61,13 +61,20 @@ def test_v1_source_loads_as_placement_only_program():
 
 
 def test_seed_policies_are_valid_programs():
+    from repro.core.evaluator import NO_PLACEMENT_ERROR
     tr = volatile_workload_trace()
     for name, pol in seed_policies().items():
         pol.compile()
-        assert pol.implements("placement"), name
-        assert EV.evaluate(pol, tr).valid, name
+        if pol.implements("placement"):
+            assert EV.evaluate(pol, tr).valid, name
+        else:
+            # request-only seeds are valid programs the analytic rung cannot
+            # rank — the shadow-replay rung of the evaluation ladder can
+            res = EV.evaluate(pol, tr)
+            assert not res.valid and res.error == NO_PLACEMENT_ERROR, name
     assert seed_policies()["sjf-request"].implements("request")
     assert not seed_policies()["greedy-reactive"].implements("request")
+    assert not seed_policies()["request-only-slo"].implements("placement")
 
 
 def test_unimplemented_domain_raises_policy_domain_error():

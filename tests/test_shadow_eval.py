@@ -1,0 +1,348 @@
+"""Evaluation ladder (analytic screen → shadow replay) + guarded canary
+rollout: determinism, request-only rankability, rollback on regression."""
+import pytest
+
+from repro.core.evaluator import Evaluator, NO_PLACEMENT_ERROR
+from repro.core.evolution import Evolution, EvolutionConfig
+from repro.core.execution_model import IntervalRecord, canary_regression
+from repro.core.plan import ClusterState, HARDWARE, QWEN25_FAMILY, Workload
+from repro.core.policy import Policy, render_policy, seed_policies
+from repro.core.runtime import (Autopoiesis, CanaryTicket, ControlPlane,
+                                DataPlane, PolicyStage, SnapshotBuffer)
+from repro.core.simulator import Simulator
+from repro.serving.shadow import (BAD_REQUEST_SOURCE, ShadowBackend,
+                                  ShadowReplayEval)
+from repro.traces import volatile_workload_trace
+from repro.traces.workload import TimestampObservation, Trace
+
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+EV = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0)
+
+
+def _shadow(**kw):
+    kw.setdefault("candidate_timeout_s", 20.0)
+    return ShadowReplayEval(SIM, MODELS, HARDWARE, **kw)
+
+
+def _single_model_trace(n=5):
+    """All placement seeds converge on near-identical plans here, so the
+    shadow rung's request-level terms decide the ranking."""
+    c = ClusterState((("H100-80G", 8),))
+    w = (Workload(QWEN25_FAMILY["7B"].name, 64, 256, 1024),)
+    obs = tuple(TimestampObservation(i, float(i), w, c) for i in range(n))
+    return Trace("single-model", obs, (QWEN25_FAMILY["7B"].name,))
+
+
+# --------------------------------------------------------------------------- #
+# rung 2: shadow replay
+# --------------------------------------------------------------------------- #
+def test_shadow_replay_is_bit_identical_across_runs():
+    tr = volatile_workload_trace().window(0, 5)
+    sh = _shadow(seed=7)
+    r1 = sh.evaluate(seed_policies()["sjf-request"], tr)
+    r2 = sh.evaluate(seed_policies()["sjf-request"], tr)
+    assert r1.valid and r2.valid
+    assert r1.fitness == r2.fitness                  # bit-identical
+    assert r1.ttft_p95_s == r2.ttft_p95_s
+    assert r1.backlogged == r2.backlogged
+    # a different seed synthesises a different burst → different fitness
+    r3 = _shadow(seed=8).evaluate(seed_policies()["sjf-request"], tr)
+    assert r3.fitness != r1.fitness
+
+
+def test_request_only_program_gets_finite_shadow_fitness():
+    tr = volatile_workload_trace().window(0, 4)
+    pol = seed_policies()["request-only-slo"]
+    assert not EV.evaluate(pol, tr).valid            # analytic rung: blind
+    res = _shadow().evaluate(pol, tr)
+    assert res.valid and res.fitness < float("inf")
+    assert res.backend == "shadow"
+    assert res.wall_s > 0.0
+
+
+def test_reconfig_domain_program_is_shadow_rankable():
+    tr = volatile_workload_trace().window(0, 4)
+    res = _shadow().evaluate(seed_policies()["live-migrate"], tr)
+    assert res.valid
+    # the replay must actually reach migration decisions: the drain twin
+    # scores differently once in-flight slots exist at plan changes
+    res_drain = _shadow().evaluate(seed_policies()["drain-reconfig"], tr)
+    assert res_drain.valid
+
+
+def test_infeasible_candidates_report_eval_wall_clock():
+    bad = Policy(source="def should_reschedule(ctx): return True\n"
+                        "def schedule(ctx): raise ValueError('boom')\n")
+    r = EV.evaluate(bad, volatile_workload_trace())
+    assert not r.valid and r.wall_s > 0.0
+    r2 = EV.evaluate(seed_policies()["request-only-slo"],
+                     volatile_workload_trace())
+    assert r2.error == NO_PLACEMENT_ERROR and r2.wall_s > 0.0
+
+
+# --------------------------------------------------------------------------- #
+# two-stage funnel
+# --------------------------------------------------------------------------- #
+def test_evolution_funnel_shadow_ranks_finalists():
+    tr = _single_model_trace()
+    evo = Evolution(EV, EvolutionConfig(max_iterations=2, patience=2,
+                                        evolution_timeout_s=30, seed=0,
+                                        shadow_top_k=3, shadow_budget=8),
+                    shadow=_shadow())
+    state = evo.run(tr)
+    assert state.best is not None                    # analytic screen ran
+    assert state.shadow_evals > 0
+    assert state.shadow_best is not None
+    assert state.shadow_best.result.backend == "shadow"
+    # the analytically unrankable request-only seed made it into the funnel
+    names = {c.policy.name for c in state.finalists}
+    assert "request-only-slo" in names
+    # shadow-scored candidates live in tail-extended MAP-Elites cells
+    assert any(len(cell) == 3 for pool in state.cells for cell in pool)
+
+
+def test_funnel_disabled_without_shadow_backend():
+    tr = _single_model_trace(3)
+    state = Evolution(EV, EvolutionConfig(max_iterations=1, patience=1,
+                                          evolution_timeout_s=20)).run(tr)
+    assert state.shadow_best is None and state.finalists == []
+
+
+# --------------------------------------------------------------------------- #
+# control plane: ladder + cache + cycle skipping
+# --------------------------------------------------------------------------- #
+def _filled_buffer(trace):
+    buf = SnapshotBuffer()
+    for obs in trace.observations:
+        buf.record(obs)
+    return buf
+
+
+def test_control_plane_skips_cycle_without_new_observations():
+    tr = _single_model_trace(4)
+    cp = ControlPlane(EV, PolicyStage(), _filled_buffer(tr),
+                      EvolutionConfig(max_iterations=1, patience=1,
+                                      evolution_timeout_s=20), window=4)
+    assert cp.run_cycle(seed_policies()["greedy-reactive"]) is not None
+    assert cp.cycles == 1
+    # no new observation since → the cycle is skipped outright
+    assert cp.run_cycle(seed_policies()["greedy-reactive"]) is None
+    assert cp.skipped_cycles == 1 and cp.cycles == 1
+
+
+def test_incumbent_evaluation_cached_per_snapshot_identity():
+    obs = _single_model_trace(1).observations[0]
+    buf = SnapshotBuffer()
+    for _ in range(5):                    # steady state: identical monitoring
+        buf.record(obs)                   # points, e.g. a stable workload
+    cp = ControlPlane(EV, PolicyStage(), buf,
+                      EvolutionConfig(max_iterations=1, patience=1,
+                                      evolution_timeout_s=20), window=4)
+    inc = seed_policies()["greedy-reactive"]
+    cp.run_cycle(inc)
+    assert cp.incumbent_cache_hits == 0
+    # a new observation with identical content → same snapshot fingerprint
+    buf.record(obs)
+    cp.run_cycle(inc)
+    assert cp.incumbent_cache_hits == 1
+
+
+def test_request_level_program_wins_guarded_cycle_end_to_end():
+    """A request-domain program receives finite shadow fitness, wins the
+    cycle, is published with a canary ticket, and the data plane commits it
+    after a healthy canary window."""
+    tr = _single_model_trace(6)
+    shadow = _shadow(request_blend=5.0)   # request-level terms decide ties
+    stage = PolicyStage()
+    buf = _filled_buffer(tr)
+    cp = ControlPlane(EV, stage, buf,
+                      EvolutionConfig(max_iterations=2, patience=2,
+                                      evolution_timeout_s=30, seed=0,
+                                      shadow_top_k=3), window=6,
+                      shadow=shadow, canary_intervals=2)
+    state = cp.run_cycle(seed_policies()["greedy-reactive"])
+    assert state.shadow_best is not None
+    assert cp.published == 1
+    staged = stage.poll(0)
+    assert staged is not None
+    version, source, ticket = staged
+    assert isinstance(ticket, CanaryTicket) and ticket.intervals == 2
+    winner = Policy(source=source, name="winner").compile()
+    assert winner.implements("request")   # a request-level program won
+    # data plane picks it up, canaries it, and commits
+    backend = ShadowBackend(SIM, seed=3)
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage, buf,
+                   backend=backend)
+    for i, obs in enumerate(tr.observations[:4]):
+        out = dp.step(obs)
+    assert dp.swap_count == 1
+    assert dp.commits == 1 and dp.rollbacks == 0
+    assert backend.pool.request_policy is not None   # hooks live on the pool
+
+
+# --------------------------------------------------------------------------- #
+# canary rollback
+# --------------------------------------------------------------------------- #
+def test_canary_rollback_on_latency_regressing_candidate():
+    tr = volatile_workload_trace()
+    backend = ShadowBackend(SIM, seed=0)
+    stage = PolicyStage()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage,
+                   SnapshotBuffer(), backend=backend)
+    # trailing incumbent window with measured metrics
+    dp.step(tr.observations[0])
+    dp.step(tr.observations[1])
+    stage.publish(Policy(source=BAD_REQUEST_SOURCE, name="regressor"),
+                  ticket=CanaryTicket(intervals=2, max_regression=0.5,
+                                      policy_name="regressor"))
+    out = dp.step(tr.observations[2])                # canary interval 1
+    assert out["canary"]["status"] == "running"
+    assert backend.pool.request_policy is not None   # candidate hooks live
+    out = dp.step(tr.observations[3])                # window resolves
+    assert out["canary"]["status"] == "rolled_back"
+    assert dp.rollbacks == 1 and dp.commits == 0
+    assert "regressor" in dp.rollback_reasons[0]
+    # incumbent fully restored: placement policy AND request hooks
+    assert dp.policy.name == "greedy-reactive"
+    assert backend.pool.request_policy is None
+    # the rolled-back source lands in the stage's quarantine ledger
+    assert stage.quarantined(BAD_REQUEST_SOURCE)
+    # serving continues undisturbed after the rollback
+    out = dp.step(tr.observations[4])
+    assert out["plan"] is not None and out["canary"] is None
+
+
+class _StubShadow:
+    """Deterministic shadow rung: request-only-slo always wins."""
+    name = "shadow"
+    fallback_placement = None
+
+    def evaluate(self, policy, trace):
+        from repro.core.evaluator import EvalResult
+        fit = 1.0 if policy.name == "request-only-slo" else 2.0
+        return EvalResult(fitness=fit, N=1, backend="shadow", ttft_p95_s=0.1)
+
+
+def test_quarantined_winner_not_republished():
+    """A source the data plane rolled back must not re-win publication —
+    deterministic replay would otherwise re-elect it every cycle."""
+    tr = _single_model_trace(4)
+    buf = _filled_buffer(tr)
+    stage = PolicyStage()
+    cp = ControlPlane(EV, stage, buf,
+                      EvolutionConfig(max_iterations=1, patience=1,
+                                      evolution_timeout_s=20, seed=0,
+                                      shadow_top_k=2), window=4,
+                      shadow=_StubShadow())
+    cp.run_cycle(None)
+    assert cp.published == 1
+    _, source, _ = stage.poll(0)
+    stage.report_rollback(source)          # the data plane rolled it back
+    buf.record(tr.observations[-1])
+    cp.run_cycle(None)
+    # the next-best, non-quarantined finalist is published instead
+    assert cp.published == 2
+    _, source2, _ = stage.poll(1)
+    assert source2 != source
+
+
+def test_quarantine_falls_back_to_next_analytic_elite():
+    """Analytic-only mode (no shadow rung): a quarantined winner must not
+    stall publication — the next non-quarantined elite is published."""
+    tr = _single_model_trace(4)
+    buf = _filled_buffer(tr)
+    stage = PolicyStage()
+    cp = ControlPlane(EV, stage, buf,
+                      EvolutionConfig(max_iterations=1, patience=1,
+                                      evolution_timeout_s=20, seed=0),
+                      window=4)
+    cp.run_cycle(None)
+    assert cp.published == 1
+    _, source, _ = stage.poll(0)
+    stage.report_rollback(source)
+    buf.record(tr.observations[-1])
+    cp.run_cycle(None)
+    assert cp.published == 2
+    assert stage.poll(1)[1] != source
+
+
+def test_unrankable_candidates_survive_shadow_budget():
+    """shadow_budget caps the analytic finalists, never the analytically
+    unrankable candidates — shadow is their only path to a fitness."""
+    tr = _single_model_trace(3)
+    evo = Evolution(EV, EvolutionConfig(max_iterations=1, patience=1,
+                                        evolution_timeout_s=30, seed=0,
+                                        shadow_top_k=4, shadow_budget=2),
+                    shadow=_shadow())
+    state = evo.run(tr)
+    names = {c.policy.name for c in state.finalists}
+    assert "request-only-slo" in names
+
+
+def test_rollback_forces_incumbent_replan():
+    """After a rollback the incumbent must re-plan at the next step even if
+    its own trigger would stay quiet — the candidate's applied plan must not
+    keep serving."""
+    tr = volatile_workload_trace()
+    backend = ShadowBackend(SIM, seed=0)
+    stage = PolicyStage()
+    passive = render_policy({"trigger_kind": "threshold",
+                             "shift_threshold": 99.0}, name="passive")
+    dp = DataPlane(EV, passive, stage, SnapshotBuffer(), backend=backend)
+    dp.step(tr.observations[0])
+    dp.step(tr.observations[0])                       # identical obs: quiet
+    stage.publish(Policy(source=BAD_REQUEST_SOURCE, name="regressor"),
+                  ticket=CanaryTicket(intervals=1, max_regression=0.2,
+                                      policy_name="regressor"))
+    dp.step(tr.observations[0])                       # canary resolves
+    assert dp.rollbacks == 1
+    out = dp.step(tr.observations[0])
+    assert out["rescheduled"] is True                 # forced re-plan
+    out = dp.step(tr.observations[0])
+    assert out["rescheduled"] is False                # one-shot, not sticky
+
+
+def test_canary_commit_keeps_candidate():
+    tr = volatile_workload_trace()
+    backend = ShadowBackend(SIM, seed=0)
+    stage = PolicyStage()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage,
+                   SnapshotBuffer(), backend=backend)
+    dp.step(tr.observations[0])
+    dp.step(tr.observations[1])
+    stage.publish(seed_policies()["sjf-request"],
+                  ticket=CanaryTicket(intervals=2, max_regression=0.5,
+                                      policy_name="sjf-request"))
+    dp.step(tr.observations[2])
+    out = dp.step(tr.observations[3])
+    assert out["canary"]["status"] == "committed"
+    assert dp.commits == 1 and dp.rollbacks == 0
+    assert backend.pool.request_policy is not None
+
+
+def test_ticketless_publish_commits_immediately():
+    """Direct stage.publish without a ticket keeps the v1 hot-swap path."""
+    tr = volatile_workload_trace()
+    stage = PolicyStage()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage,
+                   SnapshotBuffer())
+    dp.step(tr.observations[0])
+    stage.publish(render_policy({"scheduler": "hybrid"}, name="new"))
+    dp.step(tr.observations[1])
+    assert dp.swap_count == 1 and dp.commits == 0 and dp.rollbacks == 0
+    assert dp.policy.genome["scheduler"] == "hybrid"
+
+
+def test_canary_regression_totals_fallback():
+    """Without measured metrics the comparison is on normalised totals."""
+    def rec(total, serve_full):
+        r = IntervalRecord(0, False, serve_full=serve_full)
+        r.t_serve = total
+        return r
+    base = [rec(10.0, 10.0)] * 2                      # ratio 1.0
+    good = [rec(11.0, 10.0)] * 2                      # 1.1 < 1.5 → hold
+    bad = [rec(20.0, 10.0)] * 2                       # 2.0 > 1.5 → regress
+    assert canary_regression(good, base, 0.5) is None
+    assert canary_regression(bad, base, 0.5) is not None
+    assert canary_regression([], base, 0.5) is None   # no basis → commit
