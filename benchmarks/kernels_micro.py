@@ -10,6 +10,41 @@ from benchmarks.common import emit, timed
 KEY = jax.random.PRNGKey(0)
 
 
+def decode_rows() -> list:
+    """Contiguous vs paged flash-decode on identical K/V — the pair CI's
+    smoke run times side by side."""
+    rows = []
+    from repro.kernels.flash_decode import ops as fd
+    qd = jax.random.normal(KEY, (2, 8, 64))
+    kd = jax.random.normal(KEY, (2, 1024, 2, 64))
+    vd = jax.random.normal(KEY, (2, 1024, 2, 64))
+    kl = jnp.array([700, 1000])
+    out, us = timed(lambda: fd.flash_decode(qd, kd, vd, kl).block_until_ready(),
+                    repeat=3)
+    rows.append(("kernel/flash_decode_1k", us, "B2 S1024 H8/2 D64"))
+
+    # paged variant of the same decode: both batch rows read the SAME
+    # physical pages through their page tables (the shared-prefix layout),
+    # so the paged pool holds one 1024-token sequence, not two
+    page = 64
+    n_ptab = 1024 // page
+    kp = jnp.concatenate(
+        [jnp.zeros((1, page, 2, 64)),                # physical page 0: trash
+         kd[0].reshape(n_ptab, page, 2, 64)])
+    vp = jnp.concatenate(
+        [jnp.zeros((1, page, 2, 64)), vd[0].reshape(n_ptab, page, 2, 64)])
+    ptab = jnp.tile(jnp.arange(1, n_ptab + 1), (2, 1))
+    outp, us = timed(lambda: fd.paged_flash_decode(
+        qd, kp, vp, ptab, kl).block_until_ready(), repeat=3)
+    rows.append(("kernel/paged_flash_decode_1k", us,
+                 "B2 S1024 H8/2 D64 page64 shared-pages"))
+    ref = fd.flash_decode(qd, jnp.stack([kd[0]] * 2), jnp.stack([vd[0]] * 2),
+                          kl)
+    assert jnp.allclose(outp, ref, atol=2e-5), \
+        "paged flash-decode diverged from contiguous on shared pages"
+    return rows
+
+
 def run() -> list:
     rows = []
     from repro.kernels.flash_attention import ops as fa
@@ -20,14 +55,7 @@ def run() -> list:
                     repeat=3)
     rows.append(("kernel/flash_attention_256", us, "B1 S256 H4/2 D64"))
 
-    from repro.kernels.flash_decode import ops as fd
-    qd = jax.random.normal(KEY, (2, 8, 64))
-    kd = jax.random.normal(KEY, (2, 1024, 2, 64))
-    vd = jax.random.normal(KEY, (2, 1024, 2, 64))
-    kl = jnp.array([700, 1000])
-    out, us = timed(lambda: fd.flash_decode(qd, kd, vd, kl).block_until_ready(),
-                    repeat=3)
-    rows.append(("kernel/flash_decode_1k", us, "B2 S1024 H8/2 D64"))
+    rows.extend(decode_rows())
 
     from repro.kernels.rmsnorm import ops as rn
     x = jax.random.normal(KEY, (512, 1024))
@@ -59,4 +87,7 @@ def run() -> list:
 
 
 if __name__ == "__main__":
-    emit(run())
+    import sys
+    # --smoke: just the contiguous-vs-paged decode pair (the CI wiring for
+    # the paged-decode microbench; full run() covers every kernel)
+    emit(decode_rows() if "--smoke" in sys.argv[1:] else run())

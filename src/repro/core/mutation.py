@@ -97,6 +97,9 @@ _NUMERIC_STEPS = {
     # reconfig domain: how much decode progress a request needs before its
     # slot state is worth carrying instead of recomputing
     "migrate_min_progress": (0.0, 0.9, 1.6),
+    # kv_cache domain: prefix-retention admission floor and pinning bar
+    "kv_admit_min_pages": (1, 8, 2.0),
+    "kv_pin_hits": (1, 16, 2.0),
 }
 _CATEGORICAL = {
     "scheduler": ["greedy", "bnb", "hybrid"],
@@ -110,6 +113,7 @@ _CATEGORICAL = {
     "priority_kind": ["fifo", "sjf", "slo-aware"],   # request domain
     "preempt": [False, True],
     "migration_mode": ["drain", "migrate", "recompute"],   # reconfig domain
+    "kv_evict_kind": ["lru", "lfu", "pin-hot"],            # kv_cache domain
 }
 # touching any of these implicitly turns its domain on — a mutation that
 # sets priority_kind=sjf (or migration_mode=migrate) on a placement-only
@@ -117,6 +121,7 @@ _CATEGORICAL = {
 _DOMAIN_KEYS = {
     "request": ("priority_kind", "admit_load_cap", "preempt", "slo_ttft_s"),
     "reconfig": ("migration_mode", "migrate_min_progress"),
+    "kv_cache": ("kv_evict_kind", "kv_admit_min_pages", "kv_pin_hits"),
 }
 
 

@@ -56,6 +56,11 @@ DOMAINS: Dict[str, Tuple[str, ...]] = {
     # (carry its KV/SSM slot state to a survivor), or recompute (requeue a
     # continuation and pay the re-prefill)
     "reconfig": ("migration_mode",),
+    # kv_cache: cross-request prefix-cache management over the paged KV pool —
+    # admission ("retain this finished prompt's pages for reuse?") and
+    # eviction ordering under page-pool pressure (higher score evicts first),
+    # both over a KVCacheCtx plain-scalar view
+    "kv_cache": ("cache_prefix", "evict_priority"),
 }
 
 # default genome = paper's "reactive baseline" starting point
@@ -82,6 +87,10 @@ DEFAULT_GENOME: Dict[str, Any] = {
     # --- reconfig domain (consulted only when "reconfig" in domains) ---
     "migration_mode": "drain",      # drain | migrate | recompute
     "migrate_min_progress": 0.0,    # min decode-budget fraction to carry state
+    # --- kv_cache domain (consulted only when "kv_cache" in domains) ---
+    "kv_admit_min_pages": 1,        # retain prefixes spanning ≥ this many pages
+    "kv_evict_kind": "lru",         # lru | lfu | pin-hot
+    "kv_pin_hits": 4,               # pin-hot: blocks with ≥ this many hits stay
 }
 
 
@@ -114,7 +123,7 @@ def policy_namespace(domain: Optional[str] = None) -> Dict[str, Any]:
         "__builtins__": dict(_SAFE_BUILTINS),
         "math": math,
     }
-    if domain in ("request", "reconfig"):
+    if domain in ("request", "reconfig", "kv_cache"):
         return base
     base.update({
         "schedulers": schedulers,
@@ -171,6 +180,29 @@ class ReconfigPolicy:
 
     def migration_mode(self, mctx: Any) -> str:
         return str(self.mode_fn(mctx))
+
+
+@dataclass
+class KVCachePolicy:
+    """Compiled kv_cache-domain hooks, handed to the serving backend.
+
+    Both hooks receive a ``KVCacheCtx`` duck-typed view (plain scalars:
+    prefix_pages, hits, idle_s, pool pressure...).  ``cache_prefix`` answers
+    whether a finished request's full prompt pages should be retained in the
+    prefix index; ``evict_priority`` scores a retained block under page-pool
+    pressure (higher score ⇒ evicted sooner).  Advisory like the other
+    hot-path domains: hook failures fall back to admit-everything /
+    evict-LRU in the engine.
+    """
+    cache_prefix_fn: Callable[[Any], bool]
+    evict_priority_fn: Callable[[Any], float]
+    name: str = "anon"
+
+    def cache_prefix(self, kctx: Any) -> bool:
+        return bool(self.cache_prefix_fn(kctx))
+
+    def evict_priority(self, kctx: Any) -> float:
+        return float(self.evict_priority_fn(kctx))
 
 
 @dataclass
@@ -286,6 +318,15 @@ class PolicyProgram:
         return ReconfigPolicy(mode_fn, name=self.name,
                               may_migrate=(mode != "drain"
                                            if mode is not None else True))
+
+    # --- kv_cache domain ---------------------------------------------- #
+    def kv_cache_policy(self) -> Optional["KVCachePolicy"]:
+        """Compiled kv_cache-domain hooks, or None for programs that leave
+        prefix-cache management at the backend default (admit all, LRU)."""
+        if not self.implements("kv_cache"):
+            return None
+        cache_fn, evict_fn = self._hooks["kv_cache"]
+        return KVCachePolicy(cache_fn, evict_fn, name=self.name)
 
 
 # v1 name: every existing call-site (and raw v1 source) keeps working
@@ -443,6 +484,27 @@ def migration_mode(m):
 '''
 
 
+# appended when the genome declares the kv_cache domain; ``k`` is the engine's
+# KVCacheCtx view of one finished prompt (admission) or one retained prefix
+# block under page-pool pressure (eviction; higher score evicts first)
+_KV_SECTION = '''
+
+# --- kv_cache domain (Policy API v2): prefix-cache admission + eviction -----
+
+def cache_prefix(k):
+    return k.prefix_pages >= G["kv_admit_min_pages"]
+
+
+def evict_priority(k):
+    kind = G["kv_evict_kind"]
+    if kind == "lfu":
+        return -float(k.hits)            # least-reused blocks go first
+    if kind == "pin-hot" and k.hits >= G["kv_pin_hits"]:
+        return -1e9                      # hot blocks are effectively pinned
+    return float(k.idle_s)               # lru: longest-idle blocks go first
+'''
+
+
 def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgram:
     g = dict(DEFAULT_GENOME)
     g.update(genome)
@@ -454,6 +516,8 @@ def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgr
         src += _REQUEST_SECTION
     if "reconfig" in g.get("domains", ()):
         src += _RECONFIG_SECTION
+    if "kv_cache" in g.get("domains", ()):
+        src += _KV_SECTION
     return PolicyProgram(source=src, genome=g, name=name)
 
 
@@ -510,5 +574,17 @@ def seed_policies() -> Dict[str, PolicyProgram]:
         "drain-reconfig": {"scheduler": "greedy", "trigger_kind": "always",
                            "domains": ["placement", "reconfig"],
                            "migration_mode": "drain"},
+        # kv_cache-domain variants: prefix-cache management over the paged KV
+        # pool becomes evolvable — retain-everything LRU vs selective
+        # admission with hot-block pinning (agentic / shared-system-prompt
+        # workloads reward very different retention behaviour than uniform
+        # traffic, so the mutator has a real axis to explore)
+        "kv-lru": {"scheduler": "greedy", "trigger_kind": "always",
+                   "domains": ["placement", "kv_cache"],
+                   "kv_evict_kind": "lru", "kv_admit_min_pages": 1},
+        "kv-prefix-pin": {"scheduler": "greedy", "trigger_kind": "always",
+                          "domains": ["placement", "kv_cache"],
+                          "kv_evict_kind": "pin-hot", "kv_pin_hits": 2,
+                          "kv_admit_min_pages": 2},
     }
     return {k: render_policy(v, name=k) for k, v in seeds.items()}

@@ -183,15 +183,18 @@ class DataPlane:
         self._hooks_policy = self.policy
 
     def _push_request_policy(self, policy: Policy) -> None:
-        """Hand the program's request- and reconfig-domain hooks to the
-        backend (None for programs without the domain restores the backend
-        defaults: FIFO admission, synchronous drain on reconfigure)."""
+        """Hand the program's request-, reconfig- and kv_cache-domain hooks
+        to the backend (None for programs without the domain restores the
+        backend defaults: FIFO admission, synchronous drain on reconfigure,
+        admit-everything LRU prefix caching)."""
         if self.backend is None:
             return
         if hasattr(self.backend, "set_request_policy"):
             self.backend.set_request_policy(policy.request_policy())
         if hasattr(self.backend, "set_reconfig_policy"):
             self.backend.set_reconfig_policy(policy.reconfig_policy())
+        if hasattr(self.backend, "set_kv_cache_policy"):
+            self.backend.set_kv_cache_policy(policy.kv_cache_policy())
 
     def maybe_hot_swap(self) -> bool:
         """Load staged policy code at a monitoring-step boundary (§6.2).

@@ -1,13 +1,32 @@
-"""jit'd public wrapper for flash decode (GQA-aware)."""
+"""jit'd public wrappers for flash decode (GQA-aware, contiguous + paged).
+
+``interpret`` defaults from the backend (env override
+``REPRO_PALLAS_INTERPRET=0|1``): the Pallas interpreter is a debugging aid,
+not a serving path — on TPU the compiled kernel runs, elsewhere interpret
+mode keeps the kernels testable.  GQA grouping lives inside the kernels;
+nothing here materialises repeated K/V.
+"""
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.flash_decode.kernel import flash_decode_kernel
-from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.flash_decode.kernel import (flash_decode_kernel,
+                                               paged_flash_decode_kernel)
+from repro.kernels.flash_decode.ref import (flash_decode_ref,
+                                            paged_flash_decode_ref)
+
+
+def default_interpret() -> bool:
+    """Interpret Pallas kernels?  Env wins, else: compiled on TPU only."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"
 
 
 def _repeat_kv(q, k, v):
@@ -20,14 +39,42 @@ def _repeat_kv(q, k, v):
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
-                 block_k: int = 512, interpret: bool = True) -> jax.Array:
-    """q: (B, H, D); k, v: (B, S, Hkv, D); kv_len: (B,)."""
-    k, v = _repeat_kv(q, k, v)
+def _flash_decode(q, k, v, kv_len, block_k: int, interpret: bool):
     return flash_decode_kernel(q, k, v, kv_len, block_k=block_k,
                                interpret=interpret)
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
+                 block_k: int = 512,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, H, D); k, v: (B, S, Hkv, D) un-repeated; kv_len: (B,)."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_decode(q, k, v, kv_len, block_k, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def _paged_flash_decode(q, kp, vp, ptab, kv_len, window, interpret):
+    return paged_flash_decode_kernel(q, kp, vp, ptab, kv_len,
+                                     window=window, interpret=interpret)
+
+
+def paged_flash_decode(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                       ptab: jax.Array, kv_len: jax.Array,
+                       window: Optional[int] = None,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Paged decode: q (B, H, D); kp/vp (P, page, Hkv, D); ptab (B, n_ptab)
+    logical-block → physical-page; kv_len (B,).  The page table is gathered
+    inside the kernel via scalar prefetch."""
+    if interpret is None:
+        interpret = default_interpret()
+    return _paged_flash_decode(q, kp, vp, ptab, kv_len, window, interpret)
 
 
 def reference(q, k, v, kv_len):
     k, v = _repeat_kv(q, k, v)
     return flash_decode_ref(q, k, v, kv_len)
+
+
+def paged_reference(q, kp, vp, ptab, kv_len, window=None):
+    return paged_flash_decode_ref(q, kp, vp, ptab, kv_len, window=window)

@@ -231,6 +231,122 @@ def attention_fwd(p: Params, cfg: ModelConfig, x: jax.Array, positions: jax.Arra
 
 
 # --------------------------------------------------------------------------- #
+# paged attention (block-paged KV pool shared across batch slots)
+# --------------------------------------------------------------------------- #
+def paged_attention_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+                        pos2: jax.Array, window: Optional[int],
+                        kp: jax.Array, vp: jax.Array, ptab: jax.Array,
+                        lens: jax.Array, widx: jax.Array,
+                        use_kernel: bool = False, interpret: bool = True
+                        ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """GQA attention against a shared paged KV pool.
+
+    x: (B, C, d) token chunk at absolute positions ``pos2`` (B, C);
+    kp/vp: (P, page, Hkv, D) physical page pools; ptab: (B, n_ptab) int32
+    logical-block → physical-page map; lens: (B,) valid kv length *after*
+    this chunk's writes; widx: (B, C) int32 flat pool row (page·page_size +
+    offset) each token writes to — precomputed by the caller, with inactive
+    batch lanes diverted into the trash page, which replaces the contiguous
+    path's ``mask_cache_update`` rollback.
+
+    Unlike the rolling contiguous SWA cache, a paged sliding-window cache
+    stores *every* position and masks by window — logical index == absolute
+    position, so shared prefix pages are position-exact under RoPE.
+    """
+    B, C, _ = x.shape
+    H, Hkv, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    P, page = kp.shape[0], kp.shape[1]
+
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(B, C, H, D)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(B, C, Hkv, D)
+    v = v.reshape(B, C, Hkv, D)
+    q = apply_rope(q, pos2, cfg.rope_theta)
+    k = apply_rope(k, pos2, cfg.rope_theta)
+
+    flat = widx.reshape(-1)
+    new_kp = kp.reshape(P * page, Hkv, D).at[flat].set(
+        k.reshape(B * C, Hkv, D)).reshape(P, page, Hkv, D)
+    new_vp = vp.reshape(P * page, Hkv, D).at[flat].set(
+        v.reshape(B * C, Hkv, D)).reshape(P, page, Hkv, D)
+
+    if use_kernel and C == 1 and cfg.attn_logit_softcap is None:
+        from repro.kernels.flash_decode.kernel import paged_flash_decode_kernel
+        out = paged_flash_decode_kernel(q[:, 0], new_kp, new_vp, ptab, lens,
+                                        window=window,
+                                        interpret=interpret)[:, None]
+    else:
+        S = ptab.shape[1] * page
+        K = new_kp[ptab].reshape(B, S, Hkv, D)            # gather mapped pages
+        V = new_vp[ptab].reshape(B, S, Hkv, D)
+        kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+        mask = (_attn_mask(pos2, kpos, window)
+                & (kpos < lens[:, None])[:, None, None, :])
+        out = sdpa(q, K, V, mask, cfg.attn_logit_softcap)
+
+    return out.reshape(B, C, H * D) @ p["wo"].astype(x.dtype), (new_kp, new_vp)
+
+
+def paged_mla_fwd(p: Params, cfg: ModelConfig, x: jax.Array, pos2: jax.Array,
+                  ckvp: jax.Array, ptab: jax.Array, lens: jax.Array,
+                  widx: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """MLA attention against a paged latent pool ckvp (P, page, r + d_rope).
+
+    Same page-table/trash-write contract as :func:`paged_attention_fwd`; the
+    absorbed-matrix decode trick is unchanged — only the latent cache moves
+    from a per-slot buffer into shared pages.
+    """
+    m: MLAConfig = cfg.mla
+    B, C, _ = x.shape
+    H = cfg.n_heads
+    r, dr, dn, dv = m.kv_lora_rank, m.qk_rope_head_dim, m.qk_nope_head_dim, m.v_head_dim
+    P, page = ckvp.shape[0], ckvp.shape[1]
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = (x @ p["wq_a"].astype(x.dtype)) @ p["wq_b"].astype(x.dtype)
+    q = q.reshape(B, C, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, pos2, cfg.rope_theta)
+
+    ckv = x @ p["wkv_a"].astype(x.dtype)                  # (B, C, r + dr)
+    c_lat, k_rope = ckv[..., :r], ckv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], pos2, cfg.rope_theta)[:, :, 0]
+    ckv = jnp.concatenate([c_lat, k_rope], axis=-1)
+
+    new_ckvp = ckvp.reshape(P * page, r + dr).at[widx.reshape(-1)].set(
+        ckv.reshape(B * C, r + dr)).reshape(P, page, r + dr)
+
+    wk_b = p["wk_b"].astype(x.dtype).reshape(r, H, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk_b)
+
+    S = ptab.shape[1] * page
+    Ckv = new_ckvp[ptab].reshape(B, S, r + dr)
+    c_k, kr = Ckv[..., :r], Ckv[..., r:]
+    kpos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mask = (_attn_mask(pos2, kpos, None)
+            & (kpos < lens[:, None])[:, None, None, :])
+
+    s = (jnp.einsum("bshr,bkr->bhsk", q_lat, c_k,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bshd,bkd->bhsk", q_rope, kr,
+                      preferred_element_type=jnp.float32))
+    s = jnp.where(mask, s * scale, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhsk,bkr->bshr", pr, c_k)
+
+    wv_b = p["wv_b"].astype(x.dtype).reshape(r, H, dv)
+    o = jnp.einsum("bshr,rhd->bshd", o_lat, wv_b).reshape(B, C, H * dv)
+    return o @ p["wo"].astype(x.dtype), new_ckvp
+
+
+# --------------------------------------------------------------------------- #
 # MLA (Multi-head Latent Attention — MiniCPM3 / DeepSeek-V2)
 # --------------------------------------------------------------------------- #
 def init_mla(key, cfg: ModelConfig) -> Params:

@@ -33,6 +33,8 @@ from repro.models.layers import (
     mla_fwd,
     moe_dense_mix,
     moe_dispatch,
+    paged_attention_fwd,
+    paged_mla_fwd,
     rmsnorm,
     shard_hidden,
     softcap,
@@ -497,6 +499,212 @@ def mask_cache_update(cfg: ModelConfig, old_cache: Params, new_cache: Params,
         return jnp.where(m, new, old)
 
     return jax.tree_util.tree_map_with_path(one, old_cache, new_cache)
+
+
+# --------------------------------------------------------------------------- #
+# paged KV cache (block-paged pool shared across slots, prefix reuse)
+# --------------------------------------------------------------------------- #
+def pageable(cfg: ModelConfig) -> bool:
+    """Families whose cache is pure positional KV: dense/moe (incl. pure
+    SWA), MLA, vlm.  Recurrent state (ssm/hybrid), encoder-decoder xattn and
+    gemma-style local/global pairs stay on the contiguous path."""
+    return (cfg.family not in ("ssm", "hybrid")
+            and not cfg.is_encoder_decoder
+            and cfg.local_global_every == 0)
+
+
+def paged_window(cfg: ModelConfig) -> Optional[int]:
+    """Sliding window for the paged mask.  A paged SWA cache stores every
+    position and masks by window instead of ring-rotating, so logical block
+    index == absolute position and shared prefix pages stay RoPE-exact."""
+    if cfg.sliding_window is not None and cfg.local_global_every == 0:
+        return cfg.sliding_window
+    return None
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16) -> Params:
+    """Zero-filled paged pool pytree.  Physical page 0 is the trash page
+    (inactive-lane writes, unmapped page-table entries)."""
+    if not pageable(cfg):
+        raise ValueError(f"family {cfg.family!r} is not pageable")
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"ckvp": jnp.zeros(
+            (cfg.n_layers, n_pages, page_size,
+             m.kv_lora_rank + m.qk_rope_head_dim), dtype)}
+    return {"kp": jnp.zeros((cfg.n_layers, n_pages, page_size,
+                             cfg.n_kv_heads, cfg.d_head), dtype),
+            "vp": jnp.zeros((cfg.n_layers, n_pages, page_size,
+                             cfg.n_kv_heads, cfg.d_head), dtype)}
+
+
+def _paged_decoder_layer_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
+                             pos2: jax.Array, window: Optional[int], pool,
+                             ptab: jax.Array, lens: jax.Array,
+                             widx: jax.Array, use_kernel: bool,
+                             interpret: bool):
+    """Pre-norm decoder layer against the paged pool. Returns (x, new_pool)."""
+    h = rmsnorm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if cfg.mla is not None:
+        attn_out, ckvp = paged_mla_fwd(p["attn"], cfg, h, pos2, pool[0],
+                                       ptab, lens, widx)
+        new_pool = (ckvp,)
+    else:
+        attn_out, new_pool = paged_attention_fwd(
+            p["attn"], cfg, h, pos2, window, pool[0], pool[1], ptab, lens,
+            widx, use_kernel=use_kernel, interpret=interpret)
+    x = x + attn_out
+    h = rmsnorm(x, p["ln2"]["scale"], cfg.norm_eps)
+    x = x + _ffn_fwd(p["ffn"], cfg, h)
+    return shard_hidden(x), new_pool
+
+
+def paged_step(params: Params, cfg: ModelConfig, cache: Params,
+               tokens: jax.Array, pos2: jax.Array, ptab: jax.Array,
+               active: jax.Array, *, page_size: int, use_kernel: bool = False,
+               interpret: bool = True) -> Tuple[jax.Array, Params]:
+    """Cache-backed forward over a token chunk, paged pool edition.
+
+    tokens/pos2: (B, C) int32; ptab: (B, n_ptab) int32 logical-block →
+    physical-page (0 = unmapped/trash); active: (B,) bool.  The write index
+    is computed once here and shared by every layer: active lanes scatter
+    into their mapped page at ``pos % page_size``, inactive lanes into the
+    trash page — no ``reset_slots``/``mask_cache_update`` round-trips, the
+    page table itself is the isolation boundary.  Valid kv length per lane
+    is derived as ``pos2[:, -1] + 1`` (0 when inactive), i.e. the length
+    *after* this chunk lands.
+    """
+    B, C = tokens.shape
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    x = params["embed"][tokens].astype(dtype)
+    if cfg.local_global_every:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+
+    active = active.astype(bool)
+    lens = jnp.where(active, pos2[:, -1] + 1, 0).astype(jnp.int32)
+    phys = jnp.take_along_axis(ptab.astype(jnp.int32), pos2 // page_size,
+                               axis=1)                     # (B, C)
+    widx = phys * page_size + pos2 % page_size
+    widx = jnp.where(active[:, None], widx,
+                     jnp.arange(C, dtype=jnp.int32)[None, :] % page_size)
+    window = paged_window(cfg)
+
+    if cfg.mla is not None:
+        def body(h, xs):
+            lp, ckvp = xs
+            h, (c2,) = _paged_decoder_layer_fwd(
+                lp, cfg, h, pos2, None, (ckvp,), ptab, lens, widx,
+                use_kernel=False, interpret=interpret)
+            return h, c2
+        x, CKVP = jax.lax.scan(body, x, (params["layers"], cache["ckvp"]))
+        new_cache = {"ckvp": CKVP}
+    else:
+        def body(h, xs):
+            lp, kp, vp = xs
+            h, kv = _paged_decoder_layer_fwd(
+                lp, cfg, h, pos2, window, (kp, vp), ptab, lens, widx,
+                use_kernel=use_kernel, interpret=interpret)
+            return h, kv
+        x, (KP, VP) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["kp"], cache["vp"]))
+        new_cache = {"kp": KP, "vp": VP}
+
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+def extract_paged_slot(cfg: ModelConfig, cache: Params, pages, position: int,
+                       page_size: int) -> Params:
+    """Gather one request's pages into the *contiguous* extract format
+    (:func:`extract_slot`'s layout), so a paged export installs into either
+    a contiguous target (``install_slot``) or a paged one
+    (``install_paged_slot``) — page-granular migration without a special
+    wire format."""
+    pages = np.asarray(list(pages), np.int32)
+    S_src = int(len(pages)) * page_size
+    pos_row = np.where(np.arange(S_src) < position,
+                       np.arange(S_src), -1).astype(np.int32)
+    if cfg.mla is not None:
+        ckv = np.asarray(jax.device_get(cache["ckvp"][:, pages]))
+        L = ckv.shape[0]
+        return {"ckv": ckv.reshape(L, S_src, -1),
+                "pos": np.broadcast_to(pos_row, (L, S_src)).copy()}
+    k = np.asarray(jax.device_get(cache["kp"][:, pages]))
+    v = np.asarray(jax.device_get(cache["vp"][:, pages]))
+    L = k.shape[0]
+    return {"k": k.reshape(L, S_src, *k.shape[3:]),
+            "v": v.reshape(L, S_src, *v.shape[3:]),
+            "pos": np.broadcast_to(pos_row, (L, S_src)).copy()}
+
+
+def install_paged_slot(cfg: ModelConfig, cache: Params, pages, state: Params,
+                       position: int, page_size: int) -> Params:
+    """Scatter a contiguous-format slot state into freshly-owned pages.
+
+    ``pages[j]`` is the physical page for logical block j (0 = trash for SWA
+    blocks wholly outside the window — their positions are never attended
+    again).  Positions must be layer-uniform (true for every pageable
+    family); raises :class:`SlotMigrationError` when positions the request
+    still attends to are missing from the state or fall in a trash block —
+    the caller then falls back to recompute-from-continuation.
+    """
+    try:
+        if cfg.mla is not None:
+            dst_leaves, src_leaves = [cache["ckvp"]], [state["ckv"]]
+            keys = ["ckvp"]
+        else:
+            dst_leaves, src_leaves = ([cache["kp"], cache["vp"]],
+                                      [state["k"], state["v"]])
+            keys = ["kp", "vp"]
+        src_pos = np.asarray(state["pos"])
+        L, S_src = src_pos.shape
+        _require(int(dst_leaves[0].shape[0]) == L,
+                 f"layer-stack mismatch: {dst_leaves[0].shape[0]} != {L}")
+        _require(bool((src_pos == src_pos[0]).all()),
+                 "paged install requires layer-uniform cache positions")
+        sp = src_pos[0]
+        pages = list(pages)
+        n_blocks = len(pages)
+        S_buf = n_blocks * page_size
+        _require(S_buf >= position,
+                 f"{n_blocks} pages cannot hold {position} positions")
+        window = paged_window(cfg)
+        lo_req = 0 if window is None else max(position - window + 1, 0)
+        keep = (sp >= 0) & (sp < position)
+        have = np.zeros(S_buf, bool)
+        have[sp[keep]] = True
+        req = np.zeros(S_buf, bool)
+        req[lo_req:position] = True
+        for j, pid in enumerate(pages):
+            if pid == 0:
+                req_blk = req[j * page_size:(j + 1) * page_size]
+                _require(not req_blk.any(),
+                         "still-visible positions mapped to the trash page")
+        _require(not (req & ~have).any(),
+                 "state lacks positions the request still attends to")
+        jsel = [j for j, pid in enumerate(pages) if pid != 0]
+        pidx = np.asarray([pages[j] for j in jsel], np.int32)
+        new_cache = dict(cache)
+        for key, dst, src in zip(keys, dst_leaves, src_leaves):
+            _require(src.shape[0] == L and src.shape[1] == S_src
+                     and tuple(src.shape[2:]) == tuple(dst.shape[3:]),
+                     f"state shape {tuple(src.shape)} incompatible with "
+                     f"pool {tuple(dst.shape)}")
+            buf = np.zeros((L, S_buf) + tuple(src.shape[2:]), dtype=dst.dtype)
+            buf[:, sp[keep]] = src[:, keep]
+            blocks = buf.reshape(L, n_blocks, page_size, *buf.shape[2:])
+            new_cache[key] = dst.at[:, pidx].set(
+                jnp.asarray(blocks[:, jsel], dst.dtype))
+        return new_cache
+    except SlotMigrationError:
+        raise
+    except (KeyError, IndexError, TypeError, ValueError) as e:
+        raise SlotMigrationError(
+            f"slot state incompatible with paged pool: {e}") from e
 
 
 # --------------------------------------------------------------------------- #

@@ -29,7 +29,7 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.core.execution_model import IntervalMetrics
 from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
-from repro.core.policy import ReconfigPolicy, RequestPolicy
+from repro.core.policy import KVCachePolicy, ReconfigPolicy, RequestPolicy
 from repro.core.simulator import Simulator
 from repro.models import lm
 from repro.serving.engine import Engine, Request
@@ -132,6 +132,12 @@ class Backend(Protocol):
         the third evolvable surface (reconfiguration-overhead axis)."""
         ...
 
+    def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
+        """Install (or clear, with None) the kv_cache-domain hooks governing
+        cross-request prefix retention and eviction over the paged KV pool —
+        the fourth evolvable surface (cache-memory axis)."""
+        ...
+
 
 # --------------------------------------------------------------------------- #
 # simulator-backed (closes the loop without hardware)
@@ -146,6 +152,7 @@ class SimBackend:
     applied: List[Plan] = field(default_factory=list)
     request_policy: Optional[RequestPolicy] = None
     reconfig_policy: Optional[ReconfigPolicy] = None
+    kv_cache_policy: Optional[KVCachePolicy] = None
 
     def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
         # the roofline simulator has no per-request queue to reorder; the
@@ -156,6 +163,10 @@ class SimBackend:
     def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
         # no live slots to migrate in the simulator; recorded for visibility
         self.reconfig_policy = rp
+
+    def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
+        # no page pool in the simulator either; recorded for visibility
+        self.kv_cache_policy = kp
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = self.sim.reconfig_cost(self.plan, plan)
@@ -217,6 +228,9 @@ class JaxBackend:
 
     def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
         self.pool.set_reconfig_policy(rp)
+
+    def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
+        self.pool.set_kv_cache_policy(kp)
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = 0.0

@@ -30,8 +30,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.policy import RequestPolicy
+from repro.core.policy import KVCachePolicy, RequestPolicy
+from repro.kernels.flash_decode.ops import default_interpret
 from repro.models import lm
+from repro.serving import kvcache
 
 EOS_DEFAULT = -1        # disabled unless the tokenizer defines one
 
@@ -139,6 +141,11 @@ class RequestSchedulingMixin:
     def _now(self) -> float:
         return time.monotonic()
 
+    def _on_slot_released(self, slot: int, st: "RequestState") -> None:
+        """Hook fired when a request leaves its slot outside the normal
+        retire path (preemption).  Paged engines release page references
+        here; the contiguous engine and the shadow twin need nothing."""
+
     def request_ctx_for(self, req: Request,
                         now: Optional[float] = None) -> RequestCtx:
         now = self._now() if now is None else now
@@ -222,6 +229,7 @@ class RequestSchedulingMixin:
         if best_score >= worst_score:    # challenger must strictly outrank
             return
         st = self.active.pop(slot)       # slot wiped at next claim (reset path)
+        self._on_slot_released(slot, st)
         # the carry travels ON the continuation so TTFT/token accounting
         # survives a requeue onto a different replica
         proxy.first_token_time = st.first_token_time
@@ -235,7 +243,11 @@ class Engine(RequestSchedulingMixin):
                  max_seq_len: int = 256, greedy: bool = True,
                  chunked_prefill: bool = True, max_prefill_chunk: int = 64,
                  truncate_long_prompts: bool = True,
-                 request_policy: Optional[RequestPolicy] = None):
+                 request_policy: Optional[RequestPolicy] = None,
+                 paged: Optional[bool] = None, page_size: int = 16,
+                 n_pages: Optional[int] = None, prefix_cache: bool = True,
+                 kv_cache_policy: Optional[KVCachePolicy] = None,
+                 use_paged_kernel: Optional[bool] = None):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
@@ -243,16 +255,61 @@ class Engine(RequestSchedulingMixin):
         self.chunked_prefill = chunked_prefill
         self.truncate_long_prompts = truncate_long_prompts
         self.request_policy = request_policy
+        self.kv_cache_policy = kv_cache_policy
         self.policy_errors = 0       # request-hook failures (hooks are advisory)
         self.preemptions = 0
+        if paged is None:
+            paged = lm.pageable(cfg)         # the default serving path
+        elif paged and not lm.pageable(cfg):
+            raise ValueError(f"family {cfg.family!r} cannot use the paged "
+                             f"KV cache (recurrent/xattn/paired state)")
+        self.paged = bool(paged)
+        self.page_size = page_size
+        self.prefix_cache_enabled = self.paged and prefix_cache
         cache_dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
-        self.cache = lm.init_cache(cfg, n_slots, max_seq_len, dtype=cache_dtype)
         self.waiting: List[Request] = []
         self.active: Dict[int, RequestState] = {}       # slot -> state
         self.finished: List[RequestState] = []
         self.steps = 0
         self.dispatches = 0          # jitted-callable invocations (perf metric)
         self._chunk_sizes = self._allowed_chunk_sizes(max_prefill_chunk)
+
+        if self.paged:
+            pps = -(-max_seq_len // page_size)          # ceil
+            self._pages_per_slot = pps
+            if n_pages is None:
+                # full occupancy + trash + two slots' worth of retained
+                # prefixes (the evictable reuse budget under full load)
+                n_pages = 1 + (n_slots + 2) * pps
+            self.page_pool = kvcache.PagePool(n_pages)
+            self.prefix_index = kvcache.PrefixIndex(page_size)
+            self.prefix_evictions = 0
+            self._slot_pages: Dict[int, List[int]] = {}
+            self._ptab = np.zeros((n_slots, pps), np.int32)
+            self.cache = lm.init_paged_cache(cfg, n_pages, page_size,
+                                             dtype=cache_dtype)
+            # paged chunks have no rolling-ring placement constraint
+            self._rolling_limit = None
+            self._chunk_sizes = tuple(
+                c for c in _CHUNK_CANDIDATES
+                if c <= max(max_prefill_chunk, 1)) or (1,)
+            if use_paged_kernel is None:
+                # the fused kernel runs compiled on TPU; in interpret mode
+                # the jnp gather path is the faster correctness path
+                use_paged_kernel = jax.default_backend() == "tpu"
+            interp = default_interpret()
+
+            def _pgexec(p, c, t, pos2, ptab, act):
+                logits, c2 = lm.paged_step(
+                    p, cfg, c, t, pos2, ptab, act, page_size=page_size,
+                    use_kernel=use_paged_kernel, interpret=interp)
+                next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+                return next_tok, c2
+
+            self._paged_exec = jax.jit(_pgexec)
+            return
+
+        self.cache = lm.init_cache(cfg, n_slots, max_seq_len, dtype=cache_dtype)
 
         def _step(p, c, t, pos, active, reset):
             c = lm.reset_slots(cfg, c, reset)
@@ -340,6 +397,124 @@ class Engine(RequestSchedulingMixin):
     # from RequestSchedulingMixin — shared verbatim with the shadow twin
 
     # ------------------------------------------------------------------ #
+    # paged KV pool: page accounting, prefix index, kv_cache policy hooks
+    # ------------------------------------------------------------------ #
+    @property
+    def prefix_hits(self) -> int:
+        return self.prefix_index.hits if self.paged else 0
+
+    @property
+    def prefix_tokens_saved(self) -> int:
+        return self.prefix_index.tokens_matched if self.paged else 0
+
+    def _kv_ctx(self, node=None, prefix_pages: int = 0,
+                prompt_len: int = 0, now: float = 0.0) -> kvcache.KVCacheCtx:
+        pool = self.page_pool
+        if node is None:
+            return kvcache.KVCacheCtx(
+                prefix_pages=prefix_pages, prompt_len=prompt_len, hits=0,
+                idle_s=0.0, pool_free=pool.free_pages,
+                pool_total=pool.n_pages)
+        return kvcache.KVCacheCtx(
+            prefix_pages=node.depth, prompt_len=0, hits=node.hits,
+            idle_s=max(now - node.last_used, 0.0),
+            pool_free=pool.free_pages, pool_total=pool.n_pages)
+
+    def _evict_one(self) -> bool:
+        """Drop the retained prefix block the kv_cache policy likes least
+        (default LRU).  Frees a physical page only when no active request
+        still shares it — the loop in _alloc_page keeps evicting until one
+        does."""
+        cands = self.prefix_index.leaves()
+        if not cands:
+            return False
+        now = time.monotonic()
+        kp = self.kv_cache_policy
+
+        def prio(node):
+            if kp is not None:
+                try:
+                    return float(kp.evict_priority(self._kv_ctx(node, now=now)))
+                except Exception:  # noqa: BLE001 — advisory, never fatal
+                    self.policy_errors += 1
+            return max(now - node.last_used, 0.0)           # LRU fallback
+
+        victim = max(cands, key=prio)
+        self.prefix_index.remove(victim)
+        self.page_pool.unref(victim.page)
+        self.prefix_evictions += 1
+        return True
+
+    def _alloc_page(self) -> int:
+        pid = self.page_pool.alloc()
+        while pid is None:
+            if not self._evict_one():
+                raise RuntimeError(
+                    "KV page pool exhausted with nothing left to evict")
+            pid = self.page_pool.alloc()
+        return pid
+
+    def _ensure_pages(self, slot: int, upto_tokens: int) -> None:
+        """Map enough logical blocks for positions < upto_tokens."""
+        pages = self._slot_pages[slot]
+        need = -(-upto_tokens // self.page_size)
+        while len(pages) < need:
+            pid = self._alloc_page()
+            self._ptab[slot, len(pages)] = pid
+            pages.append(pid)
+
+    def _maybe_insert_prefix(self, seq: List[int], pages: List[int],
+                             now: float) -> None:
+        """Retain a finished request's full pages in the prefix index, gated
+        by the kv_cache policy's ``cache_prefix`` admission hook."""
+        n_full = min(len(seq) // self.page_size, len(pages))
+        for j in range(n_full):          # a migrated-in SWA slot may map the
+            if pages[j] == kvcache.TRASH_PAGE:   # trash page below its window
+                n_full = j
+                break
+        if n_full == 0:
+            return
+        admit = True
+        kp = self.kv_cache_policy
+        if kp is not None:
+            try:
+                admit = bool(kp.cache_prefix(self._kv_ctx(
+                    prefix_pages=n_full, prompt_len=len(seq))))
+            except Exception:  # noqa: BLE001 — advisory, never fatal
+                self.policy_errors += 1
+        if not admit:
+            return
+        new_nodes = self.prefix_index.insert(
+            seq[:n_full * self.page_size], pages[:n_full], now)
+        for node in new_nodes:           # the index holds its own page share
+            self.page_pool.ref(node.page)
+
+    def _release_pages(self, slot: int, st: RequestState) -> None:
+        """Return a departing request's page references; its written-through
+        full pages are first offered to the prefix index so the NEXT request
+        sharing the prompt (or this one's own continuation after preemption)
+        maps them copy-free."""
+        pages = self._slot_pages.pop(slot, [])
+        if pages and self.prefix_cache_enabled:
+            seq = (list(st.request.prompt) + list(st.generated))[:st.position]
+            self._maybe_insert_prefix(seq, pages, time.monotonic())
+        for pid in pages:
+            self.page_pool.unref(pid)
+        self._ptab[slot, :] = 0
+
+    def _on_slot_released(self, slot: int, st: RequestState) -> None:
+        if self.paged:
+            self._release_pages(slot, st)
+
+    def _retire(self, slot: int, st: RequestState) -> None:
+        st.done = True
+        st.finish_time = time.monotonic()
+        self.finished.append(st)
+        del self.active[slot]
+        if self.paged:
+            self._release_pages(slot, st)
+
+    # ------------------------------------------------------------------ #
     # live slot migration (cache-state transfer across engines)
     # ------------------------------------------------------------------ #
     def export_slot(self, slot: int, with_state: bool = True) -> SlotExport:
@@ -355,8 +530,17 @@ class Engine(RequestSchedulingMixin):
                        remaining, req.eos_id, req.arrival_time,
                        first_token_time=st.first_token_time,
                        prior_generated=st.prior_generated + len(st.generated))
-        cache = (lm.extract_slot(self.cfg, self.cache, slot)
-                 if with_state else None)
+        if self.paged:
+            # page-granular export in the CONTIGUOUS extract format: the
+            # target may be paged or not — one wire format either way
+            cache = (lm.extract_paged_slot(self.cfg, self.cache,
+                                           self._slot_pages[slot],
+                                           st.position, self.page_size)
+                     if with_state else None)
+            self._release_pages(slot, st)
+        else:
+            cache = (lm.extract_slot(self.cfg, self.cache, slot)
+                     if with_state else None)
         return SlotExport(cont, st, self.cfg, cache, st.position)
 
     def export_active(self, with_state: bool = True) -> List[SlotExport]:
@@ -383,12 +567,45 @@ class Engine(RequestSchedulingMixin):
                 or export.position + remaining >= self.max_seq_len):
             return False
         slot = free[0]
+        if self.paged:
+            return self._install_paged(export, slot)
         try:
             cache = lm.install_slot(self.cfg, self.cache, slot,
                                     export.cache, export.position)
         except lm.SlotMigrationError:
             return False
         self.cache = cache
+        st = export.state
+        st.slot = slot
+        self.active[slot] = st
+        return True
+
+    def _install_paged(self, export: SlotExport, slot: int) -> bool:
+        """Adopt a migrated slot into freshly-owned pages.  SWA blocks wholly
+        below the attention window map the trash page (their positions are
+        never read again) instead of spending physical pages."""
+        page = self.page_size
+        position = export.position
+        window = lm.paged_window(self.cfg)
+        lo_req = 0 if window is None else max(position - window + 1, 0)
+        n_blocks = -(-position // page)
+        pages: List[int] = []
+        try:
+            for j in range(n_blocks):
+                if (j + 1) * page <= lo_req:
+                    pages.append(kvcache.TRASH_PAGE)
+                else:
+                    pages.append(self._alloc_page())
+            cache = lm.install_paged_slot(self.cfg, self.cache, pages,
+                                          export.cache, position, page)
+        except (lm.SlotMigrationError, RuntimeError):
+            for pid in pages:
+                self.page_pool.unref(pid)
+            return False
+        self.cache = cache
+        self._slot_pages[slot] = pages
+        self._ptab[slot, :] = 0
+        self._ptab[slot, :len(pages)] = pages
         st = export.state
         st.slot = slot
         self.active[slot] = st
@@ -405,7 +622,9 @@ class Engine(RequestSchedulingMixin):
         st = RequestState(req, slot)
         self.active[slot] = st
         prompt = req.prompt or [0]
-        if not self.chunked_prefill:
+        if self.paged:
+            last = self._paged_prefill(st, prompt)
+        elif not self.chunked_prefill:
             last = 0
             for i, tok in enumerate(prompt):
                 last = self._advance_slot(st, tok, wipe_slot=(i == 0))
@@ -452,6 +671,47 @@ class Engine(RequestSchedulingMixin):
         st.position = off
         return int(np.asarray(last)[slot])
 
+    def _paged_prefill(self, st: RequestState, prompt: List[int]) -> int:
+        """Prefill into pages.  A resident prompt prefix (full pages, capped
+        one token short of the prompt) is mapped copy-free from the prefix
+        index — those chunks are never recomputed; only the remainder is
+        prefilled.  Inactive lanes' writes land in the trash page, so no
+        reset/mask passes run against the shared pool."""
+        slot = st.slot
+        pages: List[int] = []
+        matched = 0
+        if self.prefix_cache_enabled:
+            pages, matched = self.prefix_index.match(prompt, time.monotonic())
+            for pid in pages:            # the request's own share of each page
+                self.page_pool.ref(pid)
+        self._slot_pages[slot] = list(pages)
+        self._ptab[slot, :] = 0
+        self._ptab[slot, :len(pages)] = pages
+
+        prompt_arr = np.asarray(prompt, np.int32)
+        active = np.zeros((self.n_slots,), bool)
+        active[slot] = True
+        off, last = matched, 0
+        remaining = len(prompt) - matched
+        sizes = self._chunk_sizes if self.chunked_prefill else (1,)
+        for c in sizes:
+            while remaining >= c:
+                self._ensure_pages(slot, off + c)
+                tokens = np.zeros((self.n_slots, c), np.int32)
+                positions = np.zeros((self.n_slots, c), np.int32)
+                tokens[slot] = prompt_arr[off:off + c]
+                positions[slot] = np.arange(off, off + c, dtype=np.int32)
+                next_tok, self.cache = self._paged_exec(
+                    self.params, self.cache, tokens, positions,
+                    self._ptab, active)
+                self.dispatches += 1
+                st.prefill_dispatches += 1
+                off += c
+                remaining -= c
+                last = next_tok              # device array; fetched once below
+        st.position = off
+        return int(np.asarray(last)[slot])
+
     def _advance_slot(self, st: RequestState, token: int,
                       wipe_slot: bool = False) -> int:
         """Legacy per-token path (one dispatch per prompt token)."""
@@ -484,10 +744,7 @@ class Engine(RequestSchedulingMixin):
             st = self.active[slot]
             if (len(st.generated) >= req.max_new_tokens
                     or st.generated[-1] == req.eos_id):
-                st.done = True
-                st.finish_time = time.monotonic()
-                self.finished.append(st)
-                del self.active[slot]
+                self._retire(slot, st)
 
         if not self.active:
             return 0
@@ -502,9 +759,16 @@ class Engine(RequestSchedulingMixin):
             positions[slot] = st.position
             active[slot] = True
             live.append(st)
-        next_tok, self.cache = self._decode(self.params, self.cache,
-                                            tokens, positions, active,
-                                            np.zeros((self.n_slots,), bool))
+        if self.paged:
+            for st in live:              # map the block this write lands in
+                self._ensure_pages(st.slot, st.position + 1)
+            next_tok, self.cache = self._paged_exec(
+                self.params, self.cache, tokens, positions[:, None],
+                self._ptab, active)
+        else:
+            next_tok, self.cache = self._decode(self.params, self.cache,
+                                                tokens, positions, active,
+                                                np.zeros((self.n_slots,), bool))
         self.dispatches += 1
         next_np = np.asarray(next_tok)          # one device→host transfer
         produced = 0
@@ -517,10 +781,7 @@ class Engine(RequestSchedulingMixin):
             if (len(st.generated) >= req.max_new_tokens
                     or tok == req.eos_id
                     or st.position >= self.max_seq_len - 1):
-                st.done = True
-                st.finish_time = time.monotonic()
-                self.finished.append(st)
-                del self.active[st.slot]
+                self._retire(st.slot, st)
         self.steps += 1
         return produced
 

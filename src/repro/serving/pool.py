@@ -27,7 +27,7 @@ from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.plan import Plan, ReplicaGroup
-from repro.core.policy import ReconfigPolicy, RequestPolicy
+from repro.core.policy import KVCachePolicy, ReconfigPolicy, RequestPolicy
 from repro.serving.engine import Engine, Request, RequestState
 
 EngineFactory = Callable[[ReplicaGroup], Engine]
@@ -74,6 +74,7 @@ class EnginePool:
         self._replicas: Dict[ReplicaGroup, List[Engine]] = {}
         self.request_policy: Optional[RequestPolicy] = None
         self.reconfig_policy: Optional[ReconfigPolicy] = None
+        self.kv_cache_policy: Optional[KVCachePolicy] = None
         self.policy_errors = 0           # failing admit/reconfig hooks (advisory)
         self.plan: Optional[Plan] = None
         self.finished: List[RequestState] = []
@@ -123,6 +124,16 @@ class EnginePool:
         restores the synchronous-drain default)."""
         self.reconfig_policy = rp
 
+    def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
+        """Install prefix-cache admission/eviction hooks on every current and
+        future replica (None restores admit-everything + LRU eviction).  Like
+        set_request_policy, a pure attribute swap — paged engines consult the
+        hooks at their next retirement/eviction; contiguous engines ignore
+        them."""
+        self.kv_cache_policy = kp
+        for eng in self.engines:
+            eng.kv_cache_policy = kp
+
     # ------------------------------------------------------------------ #
     def _migration_mode(self, eng: Engine, st: RequestState) -> str:
         """Per-request drain|migrate|recompute decision.  Advisory like every
@@ -162,6 +173,7 @@ class EnginePool:
                 self._replicas[g] = [self._factory(g) for _ in range(n)]
                 for eng in self._replicas[g]:
                     eng.request_policy = self.request_policy
+                    eng.kv_cache_policy = self.kv_cache_policy
 
         build_first = (self.reconfig_policy is not None
                        and getattr(self.reconfig_policy, "may_migrate", True))

@@ -35,9 +35,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from repro.core.evaluator import EvalResult, Evaluator, INFEASIBLE_FITNESS
 from repro.core.execution_model import ExecutionAccumulator, IntervalMetrics
 from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
-from repro.core.policy import (Policy, ReconfigPolicy, RequestPolicy,
-                               seed_policies)
+from repro.core.policy import (KVCachePolicy, Policy, ReconfigPolicy,
+                               RequestPolicy, seed_policies)
 from repro.core.simulator import PENALTY, Simulator
+from repro.serving import kvcache
 from repro.serving.backend import ReconfigReport, measured_interval_metrics
 from repro.serving.engine import (Request, RequestSchedulingMixin,
                                   RequestState, SlotExport)
@@ -58,6 +59,18 @@ BAD_REQUEST_SOURCE = (
     "    return False\n"
     "def prioritize(r):\n"
     "    return 0.0\n"
+)
+
+# cache-thrash kv_cache program — the planted regression for the kv_cache
+# domain: never retains new prefixes AND evicts the hottest blocks first, so
+# every shared-prefix request pays full prefill and TTFT regresses against a
+# caching incumbent; a correct canary must catch and roll it back
+BAD_KV_SOURCE = (
+    'POLICY_DOMAINS = ("kv_cache",)\n'
+    "def cache_prefix(k):\n"
+    "    return False\n"
+    "def evict_priority(k):\n"
+    "    return float(k.hits)\n"
 )
 
 
@@ -95,13 +108,16 @@ class ShadowEngine(RequestSchedulingMixin):
 
     def __init__(self, model: str, n_slots: int, max_seq_len: int,
                  costs: ShadowCosts, stats: ShadowStats,
-                 request_policy: Optional[RequestPolicy] = None):
+                 request_policy: Optional[RequestPolicy] = None,
+                 kv_cache_policy: Optional[KVCachePolicy] = None,
+                 page_size: int = 8, prefix_pages_cap: int = 64):
         self.model = model
         self.n_slots = n_slots
         self.max_seq_len = max_seq_len
         self.costs = costs
         self.stats = stats
         self.request_policy = request_policy
+        self.kv_cache_policy = kv_cache_policy
         self.policy_errors = 0
         self.preemptions = 0
         self.t = 0.0                     # virtual clock (engine-local)
@@ -110,6 +126,83 @@ class ShadowEngine(RequestSchedulingMixin):
         self.finished: List[RequestState] = []
         self.steps = 0
         self.dispatches = 0
+        # toy paged-KV prefix cache on virtual time: the REAL radix index /
+        # page-pool structures (same admission + eviction semantics as the
+        # paged Engine), with prefill cost discounted by the matched tokens —
+        # what the kv_cache policy domain controls becomes visible to shadow
+        # fitness without any tensor work
+        self.page_size = page_size
+        self.prefix_index = kvcache.PrefixIndex(page_size)
+        self.prefix_pool = kvcache.PagePool(prefix_pages_cap + 1)
+        self.prefix_evictions = 0
+
+    # ------------------------------------------------------------------ #
+    # virtual prefix cache (kv_cache policy domain)
+    # ------------------------------------------------------------------ #
+    @property
+    def prefix_hits(self) -> int:
+        return self.prefix_index.hits
+
+    @property
+    def prefix_tokens_saved(self) -> int:
+        return self.prefix_index.tokens_matched
+
+    def _kv_ctx(self, node=None, prefix_pages: int = 0,
+                prompt_len: int = 0) -> kvcache.KVCacheCtx:
+        return kvcache.KVCacheCtx(
+            prefix_pages=node.depth if node is not None else prefix_pages,
+            prompt_len=prompt_len,
+            hits=node.hits if node is not None else 0,
+            idle_s=max(self.t - node.last_used, 0.0) if node is not None
+            else 0.0,
+            pool_free=self.prefix_pool.free_pages,
+            pool_total=self.prefix_pool.n_pages - 1)
+
+    def _alloc_prefix_page(self) -> Optional[int]:
+        while True:
+            pid = self.prefix_pool.alloc()
+            if pid is not None:
+                return pid
+            leaves = self.prefix_index.leaves()
+            if not leaves:
+                return None
+            kp = self.kv_cache_policy
+            if kp is not None:
+                try:
+                    victim = max(leaves, key=lambda n: float(
+                        kp.evict_priority(self._kv_ctx(n))))
+                except Exception:  # noqa: BLE001 — advisory hook
+                    self.policy_errors += 1
+                    victim = max(leaves, key=lambda n: self.t - n.last_used)
+            else:                        # default: LRU (longest idle first)
+                victim = max(leaves, key=lambda n: self.t - n.last_used)
+            self.prefix_pool.unref(self.prefix_index.remove(victim))
+            self.prefix_evictions += 1
+
+    def _retain_prefix(self, st: RequestState) -> None:
+        tokens = (list(st.request.prompt) + list(st.generated))[:st.position]
+        n_full = len(tokens) // self.page_size
+        if n_full <= 0:
+            return
+        kp = self.kv_cache_policy
+        if kp is not None:
+            try:
+                if not kp.cache_prefix(self._kv_ctx(
+                        prefix_pages=n_full, prompt_len=len(tokens))):
+                    return
+            except Exception:  # noqa: BLE001 — advisory: fall back to admit
+                self.policy_errors += 1
+        pages: List[int] = []
+        for _ in range(n_full):
+            pid = self._alloc_prefix_page()
+            if pid is None:
+                break
+            pages.append(pid)
+        used = {n.page for n in self.prefix_index.insert(tokens, pages,
+                                                         self.t)}
+        for pid in pages:                # blocks already resident keep their
+            if pid not in used:          # canonical page; return the spares
+                self.prefix_pool.unref(pid)
 
     # ------------------------------------------------------------------ #
     def max_prompt_len(self, max_new_tokens: int = 1) -> int:
@@ -171,7 +264,9 @@ class ShadowEngine(RequestSchedulingMixin):
     def _prefill(self, req: Request, slot: int) -> None:
         st = RequestState(req, slot)
         self.active[slot] = st
-        self.t += self.costs.prefill_per_token_s * max(len(req.prompt), 1)
+        _, matched = self.prefix_index.match(req.prompt, self.t)
+        self.t += self.costs.prefill_per_token_s * max(
+            len(req.prompt) - matched, 1)
         self.dispatches += 1
         st.prefill_dispatches = 1
         st.position = len(req.prompt)
@@ -186,6 +281,7 @@ class ShadowEngine(RequestSchedulingMixin):
         st.finish_time = self.t
         self.finished.append(st)
         del self.active[st.slot]
+        self._retain_prefix(st)
 
     def step(self) -> int:
         self._maybe_preempt()
@@ -261,6 +357,7 @@ class ShadowBackend:
         self._pending_off = 0
         self._t0 = 0.0
         self._costs: Dict[Tuple[str, str, int], ShadowCosts] = {}
+        self._tpl: Dict[Tuple[str, int, int], List[int]] = {}
 
     # ------------------------------------------------------------------ #
     def _costs_for(self, g: ReplicaGroup) -> ShadowCosts:
@@ -297,11 +394,29 @@ class ShadowBackend:
     def set_reconfig_policy(self, rp: Optional[ReconfigPolicy]) -> None:
         self.pool.set_reconfig_policy(rp)
 
+    def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
+        self.pool.set_kv_cache_policy(kp)
+
     # ------------------------------------------------------------------ #
+    def _template(self, model: str, p_base: int, which: int) -> List[int]:
+        """Deterministic shared system-prompt templates, stable ACROSS
+        intervals (keyed on seed+model, never the interval index) so
+        cross-request prefix reuse can actually accumulate."""
+        key = (model, p_base, which)
+        hit = self._tpl.get(key)
+        if hit is None:
+            rng = random.Random(f"{self.seed}:tpl:{model}:{p_base}:{which}")
+            hit = [rng.randint(2, 99)
+                   for _ in range(max((p_base * 3) // 4, 2))]
+            self._tpl[key] = hit
+        return hit
+
     def _begin_interval(self, workloads: Sequence[Workload]) -> None:
         """Synthesize the interval's deterministic request burst (scaled
         down per model, lengths jittered by the interval-keyed RNG so
-        priority orderings actually differ from FIFO)."""
+        priority orderings actually differ from FIFO).  Prompts are a
+        shared per-model template + a unique suffix — the agentic /
+        shared-system-prompt shape the kv_cache domain exists for."""
         if self._pending is not None:
             return
         self._t0 = self.vnow
@@ -317,8 +432,11 @@ class ShadowBackend:
                 self._rid += 1
                 p = max(2, p_base + rng.randint(-(p_base // 2), p_base // 2))
                 d = max(1, d_base + rng.randint(-1, 1))
+                tpl = self._template(w.model, p_base, rng.randint(0, 1))
+                suffix = [rng.randint(2, 99)
+                          for _ in range(max(p - len(tpl), 1))]
                 reqs.append((w.model,
-                             Request(rid=self._rid, prompt=[1] * p,
+                             Request(rid=self._rid, prompt=tpl + suffix,
                                      max_new_tokens=d,
                                      arrival_time=self._t0)))
         self._pending = reqs
@@ -453,6 +571,7 @@ class ShadowReplayEval(Evaluator):
         backend = self._make_backend()
         backend.set_request_policy(policy.request_policy())
         backend.set_reconfig_policy(policy.reconfig_policy())
+        backend.set_kv_cache_policy(policy.kv_cache_policy())
         acc = ExecutionAccumulator(self.sim,
                                    measured_blend=self.measured_blend,
                                    measured_scale=self.measured_scale,

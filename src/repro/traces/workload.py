@@ -259,6 +259,58 @@ class AgenticTrace:
         return sum(len(w) for w in self.workflows)
 
 
+def shared_prefix_requests(n_requests: int, *, prefix_pool: int = 2,
+                           prefix_len: int = 48, suffix_len: int = 8,
+                           reuse_ratio: float = 0.75, vocab: int = 100,
+                           seed: int = 0) -> List[Tuple[int, List[int]]]:
+    """Token-level prompts with a controllable cross-request reuse rate.
+
+    A ``reuse_ratio`` fraction of requests draw their first ``prefix_len``
+    tokens from a small pool of shared templates (the system-prompt /
+    few-shot-header shape that makes cross-request prefix caching pay) and
+    append a unique suffix; the rest are fully unique.  Returns
+    ``(template_idx, prompt)`` pairs — ``template_idx`` is -1 for unique
+    prompts, so benchmarks can split hit/miss populations when measuring
+    TTFT.  Deterministic in ``seed``.
+    """
+    rng = random.Random(seed)
+    templates = [[rng.randint(2, vocab - 1) for _ in range(prefix_len)]
+                 for _ in range(max(prefix_pool, 1))]
+    out: List[Tuple[int, List[int]]] = []
+    for _ in range(n_requests):
+        if rng.random() < reuse_ratio:
+            t = rng.randrange(len(templates))
+            prompt = templates[t] + [rng.randint(2, vocab - 1)
+                                     for _ in range(suffix_len)]
+        else:
+            t = -1
+            prompt = [rng.randint(2, vocab - 1)
+                      for _ in range(prefix_len + suffix_len)]
+        out.append((t, prompt))
+    return out
+
+
+def multi_turn_requests(n_workflows: int, turns: int, *, turn_len: int = 24,
+                        vocab: int = 100, seed: int = 0
+                        ) -> List[List[List[int]]]:
+    """Agentic multi-turn chains (§8.3 shape at token granularity): turn k's
+    prompt is turn k-1's full prompt plus a fresh segment, so a prefix cache
+    that retains finished requests carries the whole conversation forward
+    and each turn re-prefills only its new segment.  Returns one prompt list
+    per turn per workflow; deterministic in ``seed``."""
+    rng = random.Random(seed)
+    out: List[List[List[int]]] = []
+    for _ in range(n_workflows):
+        hist: List[int] = []
+        chain: List[List[int]] = []
+        for _ in range(max(turns, 1)):
+            hist = hist + [rng.randint(2, vocab - 1)
+                           for _ in range(turn_len)]
+            chain.append(list(hist))
+        out.append(chain)
+    return out
+
+
 def agentic_traces(n_workflows: int = 64, seed: int = 0
                    ) -> Dict[str, AgenticTrace]:
     """Two non-overlapping 64-workflow slices with ShareGPT-like length mix."""

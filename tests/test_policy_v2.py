@@ -108,7 +108,9 @@ def test_unknown_domain_rejected():
 GOLDEN_GENOME_LINE = GENOME_PREFIX + (
     '{"admit_load_cap": 0.0, "allow_split": false, "batch_scheme": "pow2", '
     '"domains": ["placement", "request"], "heterogeneity_aware": true, '
-    '"intra_node_only": false, "migrate_min_progress": 0.0, '
+    '"intra_node_only": false, "kv_admit_min_pages": 1, '
+    '"kv_evict_kind": "lru", "kv_pin_hits": 4, '
+    '"migrate_min_progress": 0.0, '
     '"migration_keep_threshold": 0.0, "migration_mode": "drain", '
     '"min_interval": 1, "preempt": false, "priority_kind": "sjf", '
     '"reconfig_penalty": 0.0, "scheduler": "greedy", "shift_threshold": 0.3, '
