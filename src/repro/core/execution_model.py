@@ -45,7 +45,8 @@ class IntervalMetrics:
     reconfig_s: float = 0.0          # measured engine-rebuild wall-clock
     simulated_serve_s: float = 0.0
     backlogged: int = 0              # requests no replica could take this interval
-    measured: bool = True
+    shed: int = 0                    # requests dropped (failure recovery /
+    measured: bool = True            # retry-budget exhaustion / backlog cap)
 
 
 @dataclass
@@ -228,6 +229,14 @@ def canary_regression(candidate: List[IntervalRecord],
         if c_bk > max(b_bk * tol, b_bk + 1.0):
             return (f"backlog {c_bk:.1f}/interval vs incumbent "
                     f"{b_bk:.1f}/interval")
+        # shed work is a loss, not a latency win: a recovery policy that
+        # drops requests looks GOOD on TTFT (only survivors are timed), so
+        # the guard compares shed rates with a tighter absolute allowance
+        c_sh = sum(m.shed for m in c_m) / len(c_m)
+        b_sh = sum(m.shed for m in b_m) / len(b_m)
+        if c_sh > max(b_sh * tol, b_sh + 0.5):
+            return (f"shed {c_sh:.1f}/interval vs incumbent "
+                    f"{b_sh:.1f}/interval")
 
     def overhead_ratio(recs: List[IntervalRecord]) -> float:
         vals = [r.total / max(r.serve_full, 1e-9)

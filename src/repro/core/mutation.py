@@ -100,6 +100,15 @@ _NUMERIC_STEPS = {
     # kv_cache domain: prefix-retention admission floor and pinning bar
     "kv_admit_min_pages": (1, 8, 2.0),
     "kv_pin_hits": (1, 16, 2.0),
+    # recovery domain: retry effort, backoff shape, straggler sensitivity
+    # and the degraded-capacity admission clamp.  straggler_factor's floor
+    # is 1.5 (below that every engine looks like a straggler); bumping the
+    # 0.0 "off" default enters at the floor like admit_load_cap does
+    "retry_budget": (1, 8, 2.0),
+    "backoff_base_s": (0.005, 1.0, 2.0),
+    "backoff_cap_s": (0.1, 8.0, 2.0),
+    "straggler_factor": (1.5, 8.0, 1.6),
+    "degraded_admit_cap": (1.0, 8.0, 1.5),
 }
 _CATEGORICAL = {
     "scheduler": ["greedy", "bnb", "hybrid"],
@@ -114,6 +123,8 @@ _CATEGORICAL = {
     "preempt": [False, True],
     "migration_mode": ["drain", "migrate", "recompute"],   # reconfig domain
     "kv_evict_kind": ["lru", "lfu", "pin-hot"],            # kv_cache domain
+    "recovery_mode": ["salvage", "recompute", "shed"],     # recovery domain
+    "fail_replan": [False, True],
 }
 # touching any of these implicitly turns its domain on — a mutation that
 # sets priority_kind=sjf (or migration_mode=migrate) on a placement-only
@@ -122,6 +133,9 @@ _DOMAIN_KEYS = {
     "request": ("priority_kind", "admit_load_cap", "preempt", "slo_ttft_s"),
     "reconfig": ("migration_mode", "migrate_min_progress"),
     "kv_cache": ("kv_evict_kind", "kv_admit_min_pages", "kv_pin_hits"),
+    "recovery": ("recovery_mode", "retry_budget", "backoff_base_s",
+                 "backoff_cap_s", "straggler_factor", "fail_replan",
+                 "degraded_admit_cap"),
 }
 
 

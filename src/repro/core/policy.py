@@ -61,6 +61,11 @@ DOMAINS: Dict[str, Tuple[str, ...]] = {
     # eviction ordering under page-pool pressure (higher score evicts first),
     # both over a KVCacheCtx plain-scalar view
     "kv_cache": ("cache_prefix", "evict_priority"),
+    # recovery: unplanned-failure containment — called once per in-flight
+    # request on a replica that died, over a FailureCtx plain-scalar view;
+    # answers salvage (live-migrate the slot state to a survivor) |
+    # recompute (requeue a continuation with capped backoff) | shed (drop)
+    "recovery": ("on_failure",),
 }
 
 # default genome = paper's "reactive baseline" starting point
@@ -91,6 +96,14 @@ DEFAULT_GENOME: Dict[str, Any] = {
     "kv_admit_min_pages": 1,        # retain prefixes spanning ≥ this many pages
     "kv_evict_kind": "lru",         # lru | lfu | pin-hot
     "kv_pin_hits": 4,               # pin-hot: blocks with ≥ this many hits stay
+    # --- recovery domain (consulted only when "recovery" in domains) ---
+    "recovery_mode": "salvage",     # salvage | recompute | shed
+    "retry_budget": 3,              # failed-request requeues before shedding
+    "backoff_base_s": 0.02,         # capped exponential backoff base
+    "backoff_cap_s": 2.0,           # backoff ceiling
+    "straggler_factor": 0.0,        # 0 = off; quarantine at factor × median
+    "fail_replan": False,           # a failure forces a re-plan next step
+    "degraded_admit_cap": 0.0,      # 0 = off; load clamp while degraded
 }
 
 
@@ -123,7 +136,7 @@ def policy_namespace(domain: Optional[str] = None) -> Dict[str, Any]:
         "__builtins__": dict(_SAFE_BUILTINS),
         "math": math,
     }
-    if domain in ("request", "reconfig", "kv_cache"):
+    if domain in ("request", "reconfig", "kv_cache", "recovery"):
         return base
     base.update({
         "schedulers": schedulers,
@@ -203,6 +216,78 @@ class KVCachePolicy:
 
     def evict_priority(self, kctx: Any) -> float:
         return float(self.evict_priority_fn(kctx))
+
+
+@dataclass
+class RecoveryPolicy:
+    """Compiled recovery-domain hook + genome-derived fault-handling knobs,
+    handed to the serving backend.
+
+    ``on_failure`` is called once per in-flight request on a replica that
+    died, with a ``FailureCtx`` duck-typed view (progress, retries,
+    exportability, surviving capacity); it answers salvage | recompute |
+    shed.  Advisory like every hot-path domain: hook failures fall back to
+    salvage-then-recompute, the lossless default.  The scalar knobs drive
+    the pool's retry/backoff machinery, straggler quarantine and
+    degraded-capacity admission clamp — genome-derived so the mutator can
+    navigate the recover-hard-vs-shed-fast trade-off.
+    """
+    mode_fn: Callable[[Any], str]
+    name: str = "anon"
+    retry_budget: int = 3            # requeues per request before shedding
+    backoff_base_s: float = 0.02     # capped exponential backoff: base…
+    backoff_cap_s: float = 2.0       # …and ceiling
+    straggler_factor: float = 0.0    # quarantine at factor × median step time
+    fail_replan: bool = False        # failure forces a re-plan next step
+    degraded_admit_cap: float = 0.0  # load clamp while capacity is reduced
+
+    def on_failure(self, fctx: Any) -> str:
+        return str(self.mode_fn(fctx))
+
+
+@dataclass
+class HookCircuitBreaker:
+    """Per-domain circuit breaker over evolved-hook exceptions.
+
+    Every hook call site reports failure (exception) or success; after
+    ``threshold`` CONSECUTIVE failures in one domain the breaker trips open
+    and call sites skip that domain's hook entirely (falling back to the
+    engine/pool default behaviour) until the breaker is reset — installing
+    fresh hooks for a domain resets it.  ``policy_errors`` used to increment
+    silently; the breaker makes a crash-looping evolved hook visible (trip
+    counts surface in the ControlPlane step report) and contained (the
+    rollback ledger can quarantine the source).
+    """
+    threshold: int = 5
+    consecutive: Dict[str, int] = field(default_factory=dict)
+    trips: Dict[str, int] = field(default_factory=dict)   # domain -> trip count
+    _open: set = field(default_factory=set)
+
+    def failure(self, domain: str) -> bool:
+        """Record one hook exception; True when this failure trips the
+        breaker (first trip only — an open breaker stays open)."""
+        n = self.consecutive.get(domain, 0) + 1
+        self.consecutive[domain] = n
+        if n >= self.threshold and domain not in self._open:
+            self._open.add(domain)
+            self.trips[domain] = self.trips.get(domain, 0) + 1
+            return True
+        return False
+
+    def success(self, domain: str) -> None:
+        self.consecutive[domain] = 0
+
+    def tripped(self, domain: str) -> bool:
+        return domain in self._open
+
+    def reset(self, domain: str) -> None:
+        """Close the breaker — freshly installed hooks earn a clean count."""
+        self.consecutive[domain] = 0
+        self._open.discard(domain)
+
+    @property
+    def open_domains(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._open))
 
 
 @dataclass
@@ -327,6 +412,28 @@ class PolicyProgram:
             return None
         cache_fn, evict_fn = self._hooks["kv_cache"]
         return KVCachePolicy(cache_fn, evict_fn, name=self.name)
+
+    # --- recovery domain ---------------------------------------------- #
+    def recovery_policy(self) -> Optional["RecoveryPolicy"]:
+        """Compiled recovery-domain hook + knobs, or None for programs that
+        leave failure handling at the pool default (salvage what exports,
+        recompute the rest, budget-capped backoff)."""
+        if not self.implements("recovery"):
+            return None
+        (mode_fn,) = self._hooks["recovery"]
+        g = self.genome or {}
+        d = DEFAULT_GENOME
+        return RecoveryPolicy(
+            mode_fn, name=self.name,
+            retry_budget=int(g.get("retry_budget", d["retry_budget"])),
+            backoff_base_s=float(g.get("backoff_base_s",
+                                       d["backoff_base_s"])),
+            backoff_cap_s=float(g.get("backoff_cap_s", d["backoff_cap_s"])),
+            straggler_factor=float(g.get("straggler_factor",
+                                         d["straggler_factor"])),
+            fail_replan=bool(g.get("fail_replan", d["fail_replan"])),
+            degraded_admit_cap=float(g.get("degraded_admit_cap",
+                                           d["degraded_admit_cap"])))
 
 
 # v1 name: every existing call-site (and raw v1 source) keeps working
@@ -505,6 +612,22 @@ def evict_priority(k):
 '''
 
 
+# appended when the genome declares the recovery domain; ``f`` is the pool's
+# FailureCtx view of one in-flight request on a replica that just died
+_RECOVERY_SECTION = '''
+
+# --- recovery domain (Policy API v2): per-request fault handling ------------
+
+def on_failure(f):
+    mode = G["recovery_mode"]
+    if f.retries >= G["retry_budget"]:
+        return "shed"                    # budget spent: stop churning
+    if mode == "salvage" and not f.exportable:
+        return "recompute"               # no survivor slot / export denied
+    return mode
+'''
+
+
 def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgram:
     g = dict(DEFAULT_GENOME)
     g.update(genome)
@@ -518,6 +641,8 @@ def render_policy(genome: Dict[str, Any], name: str = "rendered") -> PolicyProgr
         src += _RECONFIG_SECTION
     if "kv_cache" in g.get("domains", ()):
         src += _KV_SECTION
+    if "recovery" in g.get("domains", ()):
+        src += _RECOVERY_SECTION
     return PolicyProgram(source=src, genome=g, name=name)
 
 
@@ -586,5 +711,20 @@ def seed_policies() -> Dict[str, PolicyProgram]:
                           "domains": ["placement", "kv_cache"],
                           "kv_evict_kind": "pin-hot", "kv_pin_hits": 2,
                           "kv_admit_min_pages": 2},
+        # recovery-domain extremes (unplanned-failure containment): recover
+        # hard — salvage live slot state, generous retries, re-plan to heal
+        # capacity, quarantine stragglers — vs shed fast: cheap recompute
+        # with a tight budget and an admission clamp that keeps the degraded
+        # pool responsive at the price of dropped work
+        "retry-migrate": {"scheduler": "greedy", "trigger_kind": "always",
+                          "domains": ["placement", "recovery"],
+                          "recovery_mode": "salvage", "retry_budget": 4,
+                          "backoff_base_s": 0.02, "fail_replan": True,
+                          "straggler_factor": 3.0},
+        "shed-fast": {"scheduler": "greedy", "trigger_kind": "always",
+                      "domains": ["placement", "recovery"],
+                      "recovery_mode": "recompute", "retry_budget": 1,
+                      "backoff_base_s": 0.01, "backoff_cap_s": 0.25,
+                      "degraded_admit_cap": 2.0},
     }
     return {k: render_policy(v, name=k) for k, v in seeds.items()}

@@ -174,6 +174,9 @@ class DataPlane:
     _recent: Deque = field(default_factory=lambda: deque(maxlen=16))
     _hooks_policy: Policy = None               # program behind the live hooks
     _force_resched: bool = False               # re-plan after a rollback
+    _live_recovery: object = None              # RecoveryPolicy behind the hooks
+    _seen_failures: int = 0                    # backend failure_count watermark
+    _seen_trips: int = 0                       # breaker trip-count watermark
 
     def __post_init__(self):
         if self.acc is None:
@@ -195,6 +198,10 @@ class DataPlane:
             self.backend.set_reconfig_policy(policy.reconfig_policy())
         if hasattr(self.backend, "set_kv_cache_policy"):
             self.backend.set_kv_cache_policy(policy.kv_cache_policy())
+        if hasattr(self.backend, "set_recovery_policy"):
+            rec = policy.recovery_policy()
+            self.backend.set_recovery_policy(rec)
+            self._live_recovery = rec
 
     def maybe_hot_swap(self) -> bool:
         """Load staged policy code at a monitoring-step boundary (§6.2).
@@ -311,6 +318,25 @@ class DataPlane:
                                     list(obs.workloads), t_sched=0.0,
                                     rescheduled=False, measured=metrics)
             self._scratch["steps_since_resched"] += 1
+        # unplanned-failure containment surfacing: a replica death this
+        # interval forces a re-plan when the live recovery policy says
+        # failure should heal capacity (fail_replan); hook-circuit-breaker
+        # trips quarantine the source in the rollback ledger so the control
+        # plane never republishes the program whose hooks crashed serving
+        failures = int(getattr(self.backend, "failure_count", 0) or 0)
+        new_failures = failures - self._seen_failures
+        self._seen_failures = failures
+        if (new_failures > 0 and self._live_recovery is not None
+                and getattr(self._live_recovery, "fail_replan", False)):
+            self._force_resched = True
+        breaker = getattr(self.backend, "breaker", None)
+        breaker_open: tuple = ()
+        if breaker is not None:
+            breaker_open = breaker.open_domains
+            trips = sum(breaker.trips.values())
+            if trips > self._seen_trips and self._hooks_policy is not None:
+                self.stage.report_rollback(self._hooks_policy.source)
+            self._seen_trips = trips
         canary = None
         if self._canary is not None:
             canary = self._canary_observe(rec)
@@ -323,7 +349,8 @@ class DataPlane:
         return {"rescheduled": rec.rescheduled, "interval_total": rec.total,
                 "hot_swapped": swapped, "plan": self.plan,
                 "reconfig_report": report, "metrics": metrics,
-                "canary": canary, "rollbacks": self.rollbacks}
+                "canary": canary, "rollbacks": self.rollbacks,
+                "failures": new_failures, "breaker_open": breaker_open}
 
     def _serve(self, obs: TimestampObservation,
                reconfig_s: float) -> IntervalMetrics:

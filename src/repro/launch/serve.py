@@ -12,6 +12,11 @@ rollout: one evolution cycle through the evaluation ladder (analytic
 screen → shadow replay), a canary-ticketed publish, and a planted
 regression that is caught and rolled back — commit/rollback counts and
 reasons are printed.
+
+``--faults SEED`` replays a seeded kill schedule against the pool while it
+serves: each injected replica death is contained by the recovery domain
+(salvage live slots onto a survivor, requeue the rest with backoff) and the
+per-failure :class:`~repro.serving.pool.FailureReport` is printed.
 """
 from __future__ import annotations
 
@@ -102,6 +107,10 @@ def main() -> int:
     ap.add_argument("--guarded", action="store_true",
                     help="demonstrate the evaluation ladder + canary "
                          "rollout/rollback on the shadow data plane")
+    ap.add_argument("--faults", type=int, default=None, metavar="SEED",
+                    help="replay a seeded fault schedule (replica kills + "
+                         "stragglers) against the pool while it serves and "
+                         "print each FailureReport (recovery domain)")
     args = ap.parse_args()
 
     if args.guarded:
@@ -127,11 +136,39 @@ def main() -> int:
           f"({args.replicas}×{args.slots}-slot engines) "
           f"in {report.wall_s * 1e3:.1f}ms")
 
+    inj = None
+    if args.faults is not None:
+        from repro.core.policy import render_policy
+        from repro.serving.faults import FaultInjector
+        backend.pool.set_recovery_policy(render_policy(
+            {"domains": ["placement", "recovery"],
+             "recovery_mode": "salvage", "retry_budget": 3,
+             "backoff_base_s": 0.01},
+            name="retry-migrate").recovery_policy())
+        inj = FaultInjector.from_seed(args.faults, n_events=3, horizon=3,
+                                      kill_ratio=1.0, deny_export_rate=0.0)
+        print(f"fault injection: seed={args.faults} schedule="
+              f"{[(ev.step, ev.kind) for ev in inj.schedule]} "
+              f"(recovery policy: retry-migrate)")
+
     t0 = time.monotonic()
     for r in range(args.requests):
         backend.pool.submit(model, Request(
             rid=r, prompt=[1 + (r + j) % 9 for j in range(args.prompt_len)],
             max_new_tokens=args.max_new, arrival_time=time.monotonic()))
+    if inj is not None:
+        pool = backend.pool
+        for i in range(3):
+            for eng in pool.engines:
+                eng.step(); eng.step()   # let kills land mid-decode
+            seen = len(pool.failure_log)
+            inj.step(pool, i)
+            for rep in pool.failure_log[seen:]:
+                print(f"  fault@step{i}: {rep.reason} model={rep.model} "
+                      f"salvaged={rep.salvaged} recomputed={rep.recomputed} "
+                      f"requeued={rep.requeued} shed={rep.shed} "
+                      f"leaked_pages={rep.leaked_pages}")
+            backend.apply_plan(plan, None)   # heal to the target count
     done = backend.pool.run_until_drained()
     dt = time.monotonic() - t0
     toks = sum(len(d.generated) for d in done)
@@ -139,6 +176,14 @@ def main() -> int:
     print(f"arch={args.arch} served {len(done)} requests, {toks} tokens "
           f"in {dt:.2f}s ({toks / dt:.1f} tok/s, jitted dispatches={disp}, "
           f"{disp / max(len(done), 1):.1f}/request)")
+    if inj is not None:
+        pool = backend.pool
+        print(f"faults: kills={inj.kills} skipped={inj.skipped} "
+              f"straggles={inj.straggles} | recovered: "
+              f"salvaged={pool.salvaged_requests} "
+              f"retry_exhausted={pool.retry_exhausted} "
+              f"shed={len(pool.shed_requests)} "
+              f"leaked_pages={sum(r.leaked_pages for r in pool.failure_log)}")
 
     if args.resize:
         if args.reconfig != "drain":

@@ -29,7 +29,8 @@ import jax
 from repro.configs.base import ModelConfig
 from repro.core.execution_model import IntervalMetrics
 from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
-from repro.core.policy import KVCachePolicy, ReconfigPolicy, RequestPolicy
+from repro.core.policy import (KVCachePolicy, ReconfigPolicy, RecoveryPolicy,
+                               RequestPolicy)
 from repro.core.simulator import Simulator
 from repro.models import lm
 from repro.serving.engine import Engine, Request
@@ -48,7 +49,8 @@ def _percentile(sorted_vals: Sequence[float], q: float) -> float:
 
 
 def measured_interval_metrics(done: Sequence, wall: float,
-                              backlogged: int = 0) -> IntervalMetrics:
+                              backlogged: int = 0,
+                              shed: int = 0) -> IntervalMetrics:
     """Aggregate finished RequestStates into measured interval feedback.
 
     TTFT is reported as mean *and* p50/p95 (tail behaviour is what the
@@ -78,7 +80,7 @@ def measured_interval_metrics(done: Sequence, wall: float,
         ttft_p95_s=_percentile(ttfts, 0.95),
         tpot_s=decode_s / decode_tokens if decode_tokens > 0 else 0.0,
         tokens_per_s=tokens / wall if wall > 0 else 0.0,
-        backlogged=backlogged,
+        backlogged=backlogged, shed=shed,
         measured=True)   # reconfig_s merged in by DataPlane.step
 
 
@@ -138,6 +140,13 @@ class Backend(Protocol):
         the fourth evolvable surface (cache-memory axis)."""
         ...
 
+    def set_recovery_policy(self, rp: Optional[RecoveryPolicy]) -> None:
+        """Install (or clear, with None) the recovery-domain hook deciding
+        salvage|recompute|shed per in-flight request when a replica dies
+        unexpectedly, plus the retry/backoff/straggler knobs — the fifth
+        evolvable surface (unplanned-failure containment)."""
+        ...
+
 
 # --------------------------------------------------------------------------- #
 # simulator-backed (closes the loop without hardware)
@@ -153,6 +162,7 @@ class SimBackend:
     request_policy: Optional[RequestPolicy] = None
     reconfig_policy: Optional[ReconfigPolicy] = None
     kv_cache_policy: Optional[KVCachePolicy] = None
+    recovery_policy: Optional[RecoveryPolicy] = None
 
     def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:
         # the roofline simulator has no per-request queue to reorder; the
@@ -167,6 +177,10 @@ class SimBackend:
     def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
         # no page pool in the simulator either; recorded for visibility
         self.kv_cache_policy = kp
+
+    def set_recovery_policy(self, rp: Optional[RecoveryPolicy]) -> None:
+        # no replicas to kill in the simulator; recorded for visibility
+        self.recovery_policy = rp
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = self.sim.reconfig_cost(self.plan, plan)
@@ -210,8 +224,14 @@ class JaxBackend:
     max_replicas_per_group: int = 2
     requests_per_model: int = 3      # synthetic requests per workload model
     max_new_tokens: int = 6
+    # optional deterministic fault injection (serving/faults.FaultInjector):
+    # applied once per serve_interval, keyed on the interval index so the
+    # same injector seed replays the same faults at the same points
+    fault_injector: Optional[object] = None
     pool: EnginePool = field(init=False)
     _rid: int = 0
+    _interval_no: int = 0
+    _shed_seen: int = 0
 
     def __post_init__(self):
         self.pool = EnginePool(self._make_engine,
@@ -231,6 +251,19 @@ class JaxBackend:
 
     def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
         self.pool.set_kv_cache_policy(kp)
+
+    def set_recovery_policy(self, rp) -> None:
+        self.pool.set_recovery_policy(rp)
+
+    @property
+    def failure_count(self) -> int:
+        """Replica deaths so far (DataPlane reads this to trigger re-plans)."""
+        return self.pool.failures
+
+    @property
+    def breaker(self):
+        """The pool's shared hook circuit breaker (trip surfacing)."""
+        return self.pool.breaker
 
     def apply_plan(self, plan: Plan, ctx: Ctx) -> ReconfigReport:
         sim_cost = 0.0
@@ -264,12 +297,25 @@ class JaxBackend:
                     # no replica serves this model (or the admit gate is
                     # throttling): hold the request rather than dropping it
                     self.pool.add_backlog(w.model, req)
+        if self.fault_injector is not None:
+            # a step of real progress first, so kills land mid-decode (the
+            # interesting case), then the interval's scheduled faults
+            for eng in self.pool.engines:
+                if eng.waiting or eng.active:
+                    eng.step()
+            self.fault_injector.step(self.pool, self._interval_no)
+        self._interval_no += 1
         done = self.pool.run_until_drained()
         wall = time.monotonic() - t0
         # backlogged = requests STILL unserved after the drain; a request the
         # admit gate merely deferred and then served this interval is not
-        # penalised twice (its queueing delay already shows up in TTFT)
-        return measured_interval_metrics(done, wall, len(self.pool.backlog))
+        # penalised twice (its queueing delay already shows up in TTFT).
+        # shed = NEW drops this interval (recovery policy / retry budget /
+        # backlog cap) — a loss the canary guard weighs against TTFT wins
+        shed_total = len(self.pool.shed_requests) + self.pool.backlog_dropped
+        shed_new, self._shed_seen = shed_total - self._shed_seen, shed_total
+        return measured_interval_metrics(done, wall, len(self.pool.backlog),
+                                         shed=shed_new)
 
 
 def make_jax_backend(arch: str = "qwen2-1.5b", seed: int = 0,

@@ -22,7 +22,7 @@ tests/examples and under pjit on the production mesh.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -41,6 +41,13 @@ EOS_DEFAULT = -1        # disabled unless the tokenizer defines one
 _CHUNK_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
 
 
+class DrainStallError(RuntimeError):
+    """``run_until_drained`` exhausted ``max_steps`` with work still in
+    flight — a stall (e.g. a retry loop that never converges, or a backoff
+    horizon past the step budget), not a clean drain.  Raised instead of
+    returning silently so stalls cannot masquerade as empty queues."""
+
+
 @dataclass
 class Request:
     rid: int
@@ -53,6 +60,11 @@ class Request:
     # replica (engine-local carry maps lose it across the pool)
     first_token_time: Optional[float] = None
     prior_generated: int = 0     # tokens already produced in earlier lives
+    # failure-recovery carry: how many times this request was requeued off a
+    # dead replica, and the capped-exponential-backoff eligibility time the
+    # pool's backlog flush honours (0.0 = immediately eligible)
+    retries: int = 0
+    not_before: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -90,6 +102,28 @@ class MigrationCtx:
         """Fraction of the decode budget already spent — the knob
         ``migrate_min_progress`` thresholds on (young requests are cheap to
         recompute; old ones carry state worth moving)."""
+        return self.generated / max(self.generated + self.remaining, 1)
+
+
+@dataclass(frozen=True)
+class FailureCtx:
+    """Typed view of one in-flight request on a replica that just died — the
+    argument the recovery-domain policy hook (``on_failure``) receives.
+    Plain scalars only, like :class:`MigrationCtx`."""
+    rid: int
+    prompt_len: int
+    generated: int                   # tokens produced so far (all lives)
+    remaining: int                   # decode budget left
+    retries: int                     # times already requeued off a failure
+    exportable: bool                 # slot state can be salvaged right now
+    survivors: int                   # replicas left serving this model
+    free_slots: int                  # open slots across those survivors
+    queue_depth: int                 # pool backlog depth
+
+    @property
+    def progress(self) -> float:
+        """Fraction of the decode budget already spent (salvage pays off on
+        old requests; young ones are cheap to recompute or shed)."""
         return self.generated / max(self.generated + self.remaining, 1)
 
 
@@ -162,6 +196,37 @@ class RequestSchedulingMixin:
                             remaining=req.max_new_tokens - len(st.generated),
                             position=st.position)
 
+    def failure_ctx_for(self, st: RequestState, exportable: bool,
+                        survivors: int, free_slots: int,
+                        queue_depth: int) -> FailureCtx:
+        req = st.request
+        return FailureCtx(rid=req.rid, prompt_len=len(req.prompt),
+                          generated=st.prior_generated + len(st.generated),
+                          remaining=max(req.max_new_tokens
+                                        - len(st.generated), 0),
+                          retries=req.retries, exportable=exportable,
+                          survivors=survivors, free_slots=free_slots,
+                          queue_depth=queue_depth)
+
+    # --- circuit-breaker plumbing (shared by engines and the pool) ----- #
+    # ``breaker`` is an optional HookCircuitBreaker the owning pool shares
+    # across its replicas; standalone engines run without one (advisory
+    # fallbacks only, exactly the pre-breaker behaviour).
+    def _hook_open(self, domain: str) -> bool:
+        br = getattr(self, "breaker", None)
+        return br is not None and br.tripped(domain)
+
+    def _hook_error(self, domain: str) -> None:
+        self.policy_errors += 1
+        br = getattr(self, "breaker", None)
+        if br is not None:
+            br.failure(domain)
+
+    def _hook_ok(self, domain: str) -> None:
+        br = getattr(self, "breaker", None)
+        if br is not None:
+            br.success(domain)
+
     def _score(self, req: Request, now: float) -> float:
         """Priority score (lower runs first).  The ``admit`` gate is NOT
         consulted here: work in ``waiting`` is already accepted, and a
@@ -169,15 +234,18 @@ class RequestSchedulingMixin:
         counts itself in queue_depth, so deferring can never satisfy the
         cap) — ``admit`` gates ingress at EnginePool.submit instead.  Hook
         failures are advisory, never fatal: the request falls back to
-        FIFO-neutral priority and serving continues."""
+        FIFO-neutral priority and serving continues; a tripped breaker skips
+        the hook entirely."""
         rp = self.request_policy
-        if rp is None:
+        if rp is None or self._hook_open("request"):
             return 0.0
         try:
-            return rp.prioritize(self.request_ctx_for(req, now))
+            score = rp.prioritize(self.request_ctx_for(req, now))
         except Exception:  # noqa: BLE001 — evolved code must not kill serving
-            self.policy_errors += 1
+            self._hook_error("request")
             return 0.0
+        self._hook_ok("request")
+        return score
 
     def _select_admissions(self, n: int) -> List[Request]:
         """Pick up to ``n`` waiting requests to admit now.  Without a request
@@ -258,6 +326,15 @@ class Engine(RequestSchedulingMixin):
         self.kv_cache_policy = kv_cache_policy
         self.policy_errors = 0       # request-hook failures (hooks are advisory)
         self.preemptions = 0
+        # fault-tolerance state.  ``breaker`` is installed by the owning pool
+        # (shared across replicas); ``fault_slowdown`` is the injected
+        # straggler multiplier scaling the *recorded* step time (no real
+        # sleeps — tests and shadow replay stay fast); the EMA feeds the
+        # pool's straggler detector.
+        self.breaker = None
+        self.fault_slowdown = 1.0
+        self.step_ema_s = 0.0
+        self.health_samples = 0
         if paged is None:
             paged = lm.pageable(cfg)         # the default serving path
         elif paged and not lm.pageable(cfg):
@@ -379,9 +456,9 @@ class Engine(RequestSchedulingMixin):
                 raise ValueError(
                     f"prompt of {len(req.prompt)} tokens exceeds engine limit "
                     f"{limit} (max_seq_len={self.max_seq_len})")
-            req = Request(req.rid, req.prompt[-limit:], req.max_new_tokens,
-                          req.eos_id, req.arrival_time,
-                          req.first_token_time, req.prior_generated)
+            # replace() keeps every accounting field (first_token_time,
+            # prior_generated, retries, not_before) on the truncated copy
+            req = replace(req, prompt=req.prompt[-limit:])
         self.waiting.append(req)
 
     def free_slots(self) -> List[int]:
@@ -432,11 +509,14 @@ class Engine(RequestSchedulingMixin):
         kp = self.kv_cache_policy
 
         def prio(node):
-            if kp is not None:
+            if kp is not None and not self._hook_open("kv_cache"):
                 try:
-                    return float(kp.evict_priority(self._kv_ctx(node, now=now)))
+                    p = float(kp.evict_priority(self._kv_ctx(node, now=now)))
                 except Exception:  # noqa: BLE001 — advisory, never fatal
-                    self.policy_errors += 1
+                    self._hook_error("kv_cache")
+                else:
+                    self._hook_ok("kv_cache")
+                    return p
             return max(now - node.last_used, 0.0)           # LRU fallback
 
         victim = max(cands, key=prio)
@@ -476,12 +556,15 @@ class Engine(RequestSchedulingMixin):
             return
         admit = True
         kp = self.kv_cache_policy
-        if kp is not None:
+        if kp is not None and not self._hook_open("kv_cache"):
             try:
                 admit = bool(kp.cache_prefix(self._kv_ctx(
                     prefix_pages=n_full, prompt_len=len(seq))))
             except Exception:  # noqa: BLE001 — advisory, never fatal
-                self.policy_errors += 1
+                self._hook_error("kv_cache")
+                admit = True
+            else:
+                self._hook_ok("kv_cache")
         if not admit:
             return
         new_nodes = self.prefix_index.insert(
@@ -514,6 +597,26 @@ class Engine(RequestSchedulingMixin):
         if self.paged:
             self._release_pages(slot, st)
 
+    def release_all_pages(self) -> int:
+        """Drop every page reference this engine holds — active slots AND
+        retained prefix nodes — so a dead replica's refcounts return to the
+        pool exactly once.  Returns the pool's remaining used_pages (0 means
+        no leak; the pool object may be shared in tests)."""
+        if not self.paged:
+            return 0
+        for slot in list(self._slot_pages):
+            for pid in self._slot_pages.pop(slot):
+                self.page_pool.unref(pid)
+        self._ptab[:, :] = 0
+        while True:
+            leaves = self.prefix_index.leaves()
+            if not leaves:
+                break
+            for leaf in leaves:
+                self.prefix_index.remove(leaf)
+                self.page_pool.unref(leaf.page)
+        return self.page_pool.used_pages
+
     # ------------------------------------------------------------------ #
     # live slot migration (cache-state transfer across engines)
     # ------------------------------------------------------------------ #
@@ -529,7 +632,8 @@ class Engine(RequestSchedulingMixin):
         cont = Request(req.rid, list(req.prompt) + list(st.generated),
                        remaining, req.eos_id, req.arrival_time,
                        first_token_time=st.first_token_time,
-                       prior_generated=st.prior_generated + len(st.generated))
+                       prior_generated=st.prior_generated + len(st.generated),
+                       retries=req.retries)   # retry budget survives migration
         if self.paged:
             # page-granular export in the CONTIGUOUS extract format: the
             # target may be paged or not — one wire format either way
@@ -733,6 +837,7 @@ class Engine(RequestSchedulingMixin):
     # ------------------------------------------------------------------ #
     def step(self) -> int:
         """One engine iteration; returns number of tokens produced."""
+        t0 = time.monotonic()
         # 0. policy-gated preemption frees slots before admission
         self._maybe_preempt()
         # 1. admission in request-policy order (v1: FIFO slot-filling);
@@ -783,11 +888,27 @@ class Engine(RequestSchedulingMixin):
                     or st.position >= self.max_seq_len - 1):
                 self._retire(st.slot, st)
         self.steps += 1
+        self._record_step_time(time.monotonic() - t0)
         return produced
+
+    def _record_step_time(self, dt: float) -> None:
+        """EMA of measured step wall-time, scaled by the injected straggler
+        multiplier (the fault model degrades the *observation*, so the pool's
+        detector sees the slowdown without real sleeps)."""
+        dt *= self.fault_slowdown
+        if self.health_samples == 0:
+            self.step_ema_s = dt
+        else:
+            self.step_ema_s = 0.7 * self.step_ema_s + 0.3 * dt
+        self.health_samples += 1
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
         taken = 0
         while (self.waiting or self.active) and taken < max_steps:
             self.step()
             taken += 1
+        if self.waiting or self.active:
+            raise DrainStallError(
+                f"engine stalled: {len(self.waiting)} waiting, "
+                f"{len(self.active)} active after {max_steps} steps")
         return self.finished

@@ -40,8 +40,9 @@ from repro.core.policy import (KVCachePolicy, Policy, ReconfigPolicy,
 from repro.core.simulator import PENALTY, Simulator
 from repro.serving import kvcache
 from repro.serving.backend import ReconfigReport, measured_interval_metrics
-from repro.serving.engine import (Request, RequestSchedulingMixin,
-                                  RequestState, SlotExport)
+from repro.serving.engine import (DrainStallError, Request,
+                                  RequestSchedulingMixin, RequestState,
+                                  SlotExport)
 from repro.serving.pool import EnginePool
 from repro.traces.workload import Trace
 
@@ -71,6 +72,17 @@ BAD_KV_SOURCE = (
     "    return False\n"
     "def evict_priority(k):\n"
     "    return float(k.hits)\n"
+)
+
+# shed-everything recovery program — the planted regression for the recovery
+# domain: every request on a failed replica is dropped instead of salvaged
+# or retried.  The insidious part: survivors' TTFT looks GREAT (only the
+# lucky requests are timed), so the canary guard must weigh the shed rate,
+# not latency alone, to catch and roll it back
+BAD_RECOVERY_SOURCE = (
+    'POLICY_DOMAINS = ("recovery",)\n'
+    "def on_failure(f):\n"
+    "    return 'shed'\n"
 )
 
 
@@ -120,6 +132,14 @@ class ShadowEngine(RequestSchedulingMixin):
         self.kv_cache_policy = kv_cache_policy
         self.policy_errors = 0
         self.preemptions = 0
+        # fault-tolerance state, mirroring Engine: the breaker is installed
+        # by the owning pool; fault_slowdown scales VIRTUAL service time (a
+        # shadow straggler is genuinely slower on the virtual clock, so the
+        # EMA detector and shadow fitness both see it)
+        self.breaker = None
+        self.fault_slowdown = 1.0
+        self.step_ema_s = 0.0
+        self.health_samples = 0
         self.t = 0.0                     # virtual clock (engine-local)
         self.waiting: List[Request] = []
         self.active: Dict[int, RequestState] = {}
@@ -213,9 +233,9 @@ class ShadowEngine(RequestSchedulingMixin):
             req.arrival_time = self.t
         limit = self.max_prompt_len(req.max_new_tokens)
         if len(req.prompt) > limit:
-            req = Request(req.rid, req.prompt[-limit:], req.max_new_tokens,
-                          req.eos_id, req.arrival_time,
-                          req.first_token_time, req.prior_generated)
+            # replace() keeps every accounting field (first_token_time,
+            # prior_generated, retries, not_before) on the truncated copy
+            req = dataclasses.replace(req, prompt=req.prompt[-limit:])
         self.waiting.append(req)
 
     def free_slots(self) -> List[int]:
@@ -238,7 +258,8 @@ class ShadowEngine(RequestSchedulingMixin):
         cont = Request(req.rid, list(req.prompt) + list(st.generated),
                        remaining, req.eos_id, req.arrival_time,
                        first_token_time=st.first_token_time,
-                       prior_generated=st.prior_generated + len(st.generated))
+                       prior_generated=st.prior_generated + len(st.generated),
+                       retries=req.retries)   # retry budget survives migration
         cache = _SHADOW_CACHE if with_state else None
         return SlotExport(cont, st, self.model, cache, st.position)
 
@@ -265,8 +286,8 @@ class ShadowEngine(RequestSchedulingMixin):
         st = RequestState(req, slot)
         self.active[slot] = st
         _, matched = self.prefix_index.match(req.prompt, self.t)
-        self.t += self.costs.prefill_per_token_s * max(
-            len(req.prompt) - matched, 1)
+        self.t += (self.costs.prefill_per_token_s * self.fault_slowdown
+                   * max(len(req.prompt) - matched, 1))
         self.dispatches += 1
         st.prefill_dispatches = 1
         st.position = len(req.prompt)
@@ -284,6 +305,7 @@ class ShadowEngine(RequestSchedulingMixin):
         self._retain_prefix(st)
 
     def step(self) -> int:
+        t0 = self.t
         self._maybe_preempt()
         free = self.free_slots()
         for slot, req in zip(free, self._select_admissions(len(free))):
@@ -293,7 +315,7 @@ class ShadowEngine(RequestSchedulingMixin):
                 self._finish(st)
         if not self.active:
             return 0
-        self.t += self.costs.decode_step_s
+        self.t += self.costs.decode_step_s * self.fault_slowdown
         self.dispatches += 1
         produced = 0
         for slot, st in sorted(self.active.items()):
@@ -304,7 +326,29 @@ class ShadowEngine(RequestSchedulingMixin):
                     or st.position >= self.max_seq_len - 1):
                 self._finish(st)
         self.steps += 1
+        self._record_step_time(self.t - t0)
         return produced
+
+    def _record_step_time(self, dt: float) -> None:
+        # virtual dt already carries fault_slowdown (unlike Engine, which
+        # scales the recorded real wall-time — the observation either way)
+        if self.health_samples == 0:
+            self.step_ema_s = dt
+        else:
+            self.step_ema_s = 0.7 * self.step_ema_s + 0.3 * dt
+        self.health_samples += 1
+
+    def release_all_pages(self) -> int:
+        """Drop the virtual prefix cache's page references (the shadow twin
+        of Engine.release_all_pages — a dead shadow replica must not strand
+        refcounts in its PagePool either)."""
+        while True:
+            leaves = self.prefix_index.leaves()
+            if not leaves:
+                break
+            for leaf in leaves:
+                self.prefix_pool.unref(self.prefix_index.remove(leaf))
+        return self.prefix_pool.used_pages
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[RequestState]:
         # only EnginePool.reconfigure drains a single engine: the elapsed
@@ -315,6 +359,10 @@ class ShadowEngine(RequestSchedulingMixin):
             self.step()
             taken += 1
         self.stats.drain_s += self.t - t0
+        if self.waiting or self.active:
+            raise DrainStallError(
+                f"shadow engine stalled: {len(self.waiting)} waiting, "
+                f"{len(self.active)} active after {max_steps} steps")
         return self.finished
 
 
@@ -337,7 +385,7 @@ class ShadowBackend:
     def __init__(self, sim: Simulator, seed: int = 0, slots_cap: int = 2,
                  max_replicas_per_group: int = 1, requests_per_model: int = 4,
                  max_new_cap: int = 6, max_seq_len: int = 256,
-                 time_scale: float = 1.0):
+                 time_scale: float = 1.0, faults=None):
         self.sim = sim
         self.seed = seed
         self.slots_cap = slots_cap
@@ -345,13 +393,19 @@ class ShadowBackend:
         self.max_new_cap = max_new_cap
         self.max_seq_len = max_seq_len
         self.time_scale = time_scale
+        # optional FaultInjector replayed on the interval index: candidates
+        # are shadow-evaluated against the same seeded fault schedule they
+        # will face live
+        self.faults = faults
         self.stats = ShadowStats()
         self.vnow = 0.0                  # global virtual clock
         self.pool = EnginePool(self._make_engine,
                                max_replicas_per_group=max_replicas_per_group,
-                               now_fn=lambda: self.vnow)
+                               now_fn=lambda: self.vnow,
+                               wait_fn=self._vwait)
         self._interval_idx = 0
         self._fin_seen = 0
+        self._shed_seen = 0
         self._rid = 0
         self._pending: Optional[List[Tuple[str, Request]]] = None
         self._pending_off = 0
@@ -396,6 +450,24 @@ class ShadowBackend:
 
     def set_kv_cache_policy(self, kp: Optional[KVCachePolicy]) -> None:
         self.pool.set_kv_cache_policy(kp)
+
+    def set_recovery_policy(self, rp) -> None:
+        self.pool.set_recovery_policy(rp)
+
+    @property
+    def failure_count(self) -> int:
+        return self.pool.failures
+
+    @property
+    def breaker(self):
+        return self.pool.breaker
+
+    def _vwait(self, dt: float) -> None:
+        """Backoff 'sleep' on the virtual clock: advance vnow and pull every
+        engine clock forward so retried requests genuinely pay the wait."""
+        self.vnow += dt
+        for e in self.pool.engines:
+            e.t = max(e.t, self.vnow)
 
     # ------------------------------------------------------------------ #
     def _template(self, model: str, p_base: int, which: int) -> List[int]:
@@ -487,14 +559,25 @@ class ShadowBackend:
             if not self.pool.submit(model, req):
                 self.pool.add_backlog(model, req)
         self._pending = None
+        if self.faults is not None:
+            # one step of progress so kills land mid-decode, then this
+            # interval's scheduled faults (keyed on the interval index —
+            # _begin_interval already advanced it past the current one)
+            for e in self.pool.engines:
+                if e.waiting or e.active:
+                    e.step()
+            self.faults.step(self.pool, self._interval_idx - 1)
         self.pool.run_until_drained()
         done = self.pool.finished[self._fin_seen:]
         self._fin_seen = len(self.pool.finished)
         end = max((e.t for e in self.pool.engines), default=t0)
         wall = max(end - t0, 1e-9)
         self.vnow = max(self.vnow, end)
+        shed_total = len(self.pool.shed_requests) + self.pool.backlog_dropped
+        shed_new, self._shed_seen = (shed_total - self._shed_seen, shed_total)
         metrics = measured_interval_metrics(done, wall,
-                                            len(self.pool.backlog))
+                                            len(self.pool.backlog),
+                                            shed=shed_new)
         serve_s = (self.sim.serve_cost(self.pool.plan, list(workloads))
                    if self.pool.plan is not None else 0.0)
         return dataclasses.replace(metrics, simulated_serve_s=serve_s)
@@ -531,6 +614,9 @@ class ShadowReplayEval(Evaluator):
     measured_blend: float = 0.25
     measured_scale: float = 1.0
     fallback_placement: Optional[Policy] = None
+    # seeded FailureEvent schedule replayed against every candidate (the
+    # SAME faults the live pool will face); None evaluates fault-free
+    fault_schedule: Optional[Tuple] = None
 
     def _fallback(self) -> Policy:
         if self.fallback_placement is None:
@@ -548,10 +634,17 @@ class ShadowReplayEval(Evaluator):
         return 0.1                        # hand-written source: flat charge
 
     def _make_backend(self) -> ShadowBackend:
+        faults = None
+        if self.fault_schedule:
+            from repro.serving.faults import FaultInjector
+            # a FRESH injector per evaluation: cursor/counters are replay
+            # state, the schedule is the shared contract
+            faults = FaultInjector(schedule=tuple(self.fault_schedule))
         return ShadowBackend(self.sim, seed=self.seed,
                              slots_cap=self.slots_cap,
                              max_replicas_per_group=self.max_replicas_per_group,
-                             requests_per_model=self.requests_per_model)
+                             requests_per_model=self.requests_per_model,
+                             faults=faults)
 
     # ------------------------------------------------------------------ #
     def evaluate(self, policy: Policy, trace: Trace) -> EvalResult:
@@ -572,6 +665,7 @@ class ShadowReplayEval(Evaluator):
         backend.set_request_policy(policy.request_policy())
         backend.set_reconfig_policy(policy.reconfig_policy())
         backend.set_kv_cache_policy(policy.kv_cache_policy())
+        backend.set_recovery_policy(policy.recovery_policy())
         acc = ExecutionAccumulator(self.sim,
                                    measured_blend=self.measured_blend,
                                    measured_scale=self.measured_scale,
@@ -594,25 +688,31 @@ class ShadowReplayEval(Evaluator):
             if err is not None:
                 return fail(err)
 
-            if trigger:
-                # in-flight work first, so the plan change exercises the
-                # candidate's migration_mode on live slots
-                backend.preload(obs.workloads, k=self.preload_in_flight)
-                report = backend.apply_plan(new_plan, ctx)
-                metrics = backend.serve_interval(obs.workloads)
-                metrics = dataclasses.replace(metrics,
-                                              reconfig_s=report.wall_s)
-                acc.interval(idx, plan, new_plan, list(obs.workloads),
-                             t_sched=sched_cost, rescheduled=True,
-                             measured=metrics)
-                plan = new_plan
-                last_w, last_c = list(obs.workloads), obs.cluster
-                scratch["steps_since_resched"] = 0
-            else:
-                metrics = backend.serve_interval(obs.workloads)
-                acc.interval(idx, plan, plan, list(obs.workloads),
-                             t_sched=0.0, rescheduled=False, measured=metrics)
-                scratch["steps_since_resched"] += 1
+            try:
+                if trigger:
+                    # in-flight work first, so the plan change exercises the
+                    # candidate's migration_mode on live slots
+                    backend.preload(obs.workloads, k=self.preload_in_flight)
+                    report = backend.apply_plan(new_plan, ctx)
+                    metrics = backend.serve_interval(obs.workloads)
+                    metrics = dataclasses.replace(metrics,
+                                                  reconfig_s=report.wall_s)
+                    acc.interval(idx, plan, new_plan, list(obs.workloads),
+                                 t_sched=sched_cost, rescheduled=True,
+                                 measured=metrics)
+                    plan = new_plan
+                    last_w, last_c = list(obs.workloads), obs.cluster
+                    scratch["steps_since_resched"] = 0
+                else:
+                    metrics = backend.serve_interval(obs.workloads)
+                    acc.interval(idx, plan, plan, list(obs.workloads),
+                                 t_sched=0.0, rescheduled=False,
+                                 measured=metrics)
+                    scratch["steps_since_resched"] += 1
+            except DrainStallError as e:
+                # a candidate whose recovery/backoff loop never converges is
+                # infeasible, not a crash of the evaluator
+                return fail(f"drain stall: {e}")
             ttft_num += metrics.ttft_p95_s * metrics.requests
             ttft_den += metrics.requests
             if acc.T_total >= PENALTY:

@@ -311,6 +311,62 @@ def multi_turn_requests(n_workflows: int, turns: int, *, turn_len: int = 24,
     return out
 
 
+# --------------------------------------------------------------------------- #
+# unplanned failure events (fault-injection schedules)
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class FailureEvent:
+    """One unplanned runtime fault, anchored to a serving step/interval.
+
+    Unlike the *planned* cluster transitions in ``elastic_cluster_traces``
+    (announced by the trace, handled by reconfiguration), these strike
+    mid-serving with no warning: ``kill`` removes a replica abruptly (spot
+    preemption / crash), ``straggle`` degrades one into a straggler whose
+    every step takes ``magnitude`` times longer (thermal throttling, noisy
+    neighbour), ``restore`` lifts the degradation.  ``engine_idx`` indexes
+    the pool's deterministic engine order modulo its size, so the same
+    schedule names the same victims on every replay.
+    """
+    step: int
+    kind: str                        # "kill" | "straggle" | "restore"
+    engine_idx: int
+    magnitude: float = 4.0           # straggler per-step latency multiplier
+    deny_export: bool = False        # kill: slot exports corrupted/denied
+
+
+def failure_schedule(seed: int, n_events: int = 4, horizon: int = 16,
+                     kill_ratio: float = 0.5, deny_export_rate: float = 0.25,
+                     straggle_magnitude: Tuple[float, float] = (2.0, 6.0),
+                     ) -> Tuple[FailureEvent, ...]:
+    """Deterministic, seedable fault schedule: same seed → same schedule.
+
+    ``kill_ratio`` of the events are abrupt replica kills (a
+    ``deny_export_rate`` fraction of those also corrupt the dying replica's
+    slot exports, forcing the recompute path); the rest split between
+    straggler degradation and restoration.  Events are sorted by step so an
+    injector can replay them with a single cursor.
+    """
+    rng = random.Random(f"faults:{seed}")
+    events: List[FailureEvent] = []
+    for _ in range(max(n_events, 0)):
+        step = rng.randrange(1, max(horizon, 2))
+        idx = rng.randrange(16)
+        r = rng.random()
+        if r < kill_ratio:
+            events.append(FailureEvent(
+                step, "kill", idx,
+                deny_export=rng.random() < deny_export_rate))
+        elif r < kill_ratio + (1.0 - kill_ratio) * 0.7:
+            lo, hi = straggle_magnitude
+            events.append(FailureEvent(
+                step, "straggle", idx,
+                magnitude=round(rng.uniform(lo, hi), 3)))
+        else:
+            events.append(FailureEvent(step, "restore", idx))
+    return tuple(sorted(events,
+                        key=lambda e: (e.step, e.kind, e.engine_idx)))
+
+
 def agentic_traces(n_workflows: int = 64, seed: int = 0
                    ) -> Dict[str, AgenticTrace]:
     """Two non-overlapping 64-workflow slices with ShareGPT-like length mix."""

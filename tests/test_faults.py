@@ -1,0 +1,441 @@
+"""Unplanned-failure containment: deterministic fault injection, replica
+death with salvage / recompute / shed recovery, capped-backoff retries,
+straggler quarantine, the evolved-hook circuit breaker, and the canary
+guard rolling back a pathological recovery policy."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.evaluator import Evaluator
+from repro.core.plan import (ClusterState, HARDWARE, Plan, QWEN25_FAMILY,
+                             ReplicaGroup, Workload)
+from repro.core.policy import (Policy, RequestPolicy, render_policy,
+                               seed_policies)
+from repro.core.runtime import (CanaryTicket, DataPlane, PolicyStage,
+                                SnapshotBuffer)
+from repro.core.simulator import Simulator
+from repro.models import lm
+from repro.serving.backend import measured_interval_metrics
+from repro.serving.engine import DrainStallError, Engine, Request
+from repro.serving.faults import FaultInjector, failure_schedule
+from repro.serving.pool import EnginePool
+from repro.serving.shadow import BAD_RECOVERY_SOURCE, ShadowBackend
+from repro.traces.workload import FailureEvent, TimestampObservation, Trace
+
+KEY = jax.random.PRNGKey(0)
+CFG = get_config("qwen2-1.5b").reduced()
+PARAMS = lm.init_params(CFG, KEY)
+
+# batch=3 → 3 slots per replica: a failed replica's two in-flight slots both
+# fit on the survivor, so the salvage path is deterministic
+GA = ReplicaGroup("m", "H100-80G", tp=1, batch=3, count=2)
+GB = ReplicaGroup("m", "H100-80G", tp=1, batch=3, count=3)
+G_SINGLE = ReplicaGroup("m", "H100-80G", tp=1, batch=2, count=1)
+
+PROMPTS = {0: [5, 9, 11, 4], 1: [7, 3, 8], 2: [2, 6, 10, 12, 3]}
+
+
+def _reference(prompt, max_new=6):
+    eng = Engine(CFG, PARAMS, n_slots=2, max_seq_len=64)
+    eng.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=max_new))
+    return eng.run_until_drained()[0].generated
+
+
+def _pool(genome=None, **kw):
+    pool = EnginePool(lambda g: Engine(CFG, PARAMS,
+                                       n_slots=max(1, min(g.batch, 3)),
+                                       max_seq_len=64), **kw)
+    if genome is not None:
+        g = {"domains": ["placement", "recovery"]}
+        g.update(genome)
+        pool.set_recovery_policy(render_policy(g, name="t").recovery_policy())
+    return pool
+
+
+def _load_and_snapshot(pool):
+    """Submit PROMPTS (rid0/rid2 land on replica 0, rid1 on replica 1),
+    decode a couple of steps, return rid -> first_token_time."""
+    for rid, p in PROMPTS.items():
+        assert pool.submit("m", Request(rid=rid, prompt=list(p),
+                                        max_new_tokens=6))
+    for eng in pool.engines:
+        eng.step(); eng.step()
+    return {s.request.rid: s.first_token_time
+            for e in pool.engines for s in e.active.values()}
+
+
+def _check_outputs_and_accounting(pool, fts, lost=()):
+    """Every surviving request finishes greedy-exactly (continuations count
+    their earlier-life tokens via prior_generated) and carries its original
+    first-token time; finished + shed == submitted."""
+    kept = sorted(set(PROMPTS) - set(lost))
+    assert sorted(s.request.rid for s in pool.finished) == kept
+    for s in pool.finished:
+        rid = s.request.rid
+        full = list(s.request.prompt[len(PROMPTS[rid]):]) + list(s.generated)
+        assert full == _reference(PROMPTS[rid])
+        assert s.prior_generated + len(s.generated) == 6
+        assert s.first_token_time == fts[rid]
+    assert sorted(r.rid for r in pool.shed_requests) == sorted(lost)
+    assert len(pool.finished) + len(pool.shed_requests) == len(PROMPTS)
+
+
+# --------------------------------------------------------------------------- #
+# deterministic fault schedules
+# --------------------------------------------------------------------------- #
+def test_failure_schedule_is_a_pure_function_of_the_seed():
+    a = failure_schedule(7)
+    assert a == failure_schedule(7)              # same seed → same schedule
+    assert failure_schedule(8) != a              # different seed → different
+    assert all(ev.kind in ("kill", "straggle", "restore") for ev in a)
+    steps = [ev.step for ev in a]
+    assert steps == sorted(steps) and all(0 <= s < 16 for s in steps)
+
+
+def test_injector_spares_the_last_survivor_and_applies_straggles():
+    pool = _pool()
+    pool.reconfigure(Plan((G_SINGLE,)))
+    [e0] = pool.engines
+    inj = FaultInjector(schedule=(
+        FailureEvent(step=0, kind="kill", engine_idx=0),
+        FailureEvent(step=1, kind="straggle", engine_idx=0, magnitude=4.0),
+        FailureEvent(step=2, kind="restore", engine_idx=0)))
+    assert inj.step(pool, 0) == 1
+    assert inj.skipped == 1 and pool.engines == [e0]   # no survivor: spared
+    inj.step(pool, 1)
+    assert inj.straggles == 1 and e0.fault_slowdown == 4.0
+    inj.step(pool, 2)
+    assert inj.restores == 1 and e0.fault_slowdown == 1.0
+    assert inj.exhausted
+
+
+def test_injector_kill_fails_the_replica_through_the_pool():
+    pool = _pool({"recovery_mode": "salvage", "backoff_base_s": 0.005})
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    fts = _load_and_snapshot(pool)
+    inj = FaultInjector(schedule=(
+        FailureEvent(step=0, kind="kill", engine_idx=0, deny_export=True),))
+    inj.step(pool, 0)
+    assert inj.kills == 1 and inj.denied == 1 and inj.export_denied(e0)
+    assert pool.failures == 1 and len(pool.engines) == 1
+    assert pool.failure_log[0].reason == "injected-kill"
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+
+
+# --------------------------------------------------------------------------- #
+# fail(): salvage / recompute / shed dispositions
+# --------------------------------------------------------------------------- #
+def test_salvage_moves_live_slots_to_the_survivor_greedy_exact():
+    pool = _pool({"recovery_mode": "salvage"})
+    pool.reconfigure(Plan((GA,)))
+    e0, e1 = pool.engines
+    fts = _load_and_snapshot(pool)
+    rep = pool.fail(e0, reason="spot-preemption")
+    assert rep.salvaged == 2 and rep.recomputed == 0 and rep.shed == 0
+    assert rep.leaked_pages == 0
+    assert pool.salvaged_requests == 2
+    # the slots resumed decoding in place on the survivor — no re-prefill
+    assert len(e1.active) == 3
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+
+
+def test_denied_export_falls_back_to_recompute_with_retry_accounting():
+    pool = _pool({"recovery_mode": "salvage", "backoff_base_s": 0.005})
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    fts = _load_and_snapshot(pool)
+    rep = pool.fail(e0, deny_export=True)      # corrupt state: no salvage
+    assert rep.salvaged == 0 and rep.recomputed == 2 and rep.shed == 0
+    assert pool.requeued_requests == 2
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+    # the continuations went through one backoff-stamped retry
+    assert all(s.request.retries == 1 for s in pool.finished
+               if s.request.rid in (0, 2))
+
+
+def test_shed_recovery_policy_drops_in_flight_work_with_clean_accounting():
+    pool = _pool({"recovery_mode": "shed"})
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    fts = _load_and_snapshot(pool)
+    rep = pool.fail(e0)
+    assert rep.shed == 2 and rep.salvaged == 0 and rep.recomputed == 0
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts, lost=(0, 2))
+    m = measured_interval_metrics(pool.finished, wall=1.0,
+                                  shed=len(pool.shed_requests))
+    assert m.shed == 2
+
+
+def test_fail_releases_paged_kv_pages_exactly_once():
+    pool = EnginePool(lambda g: Engine(CFG, PARAMS, n_slots=2,
+                                       max_seq_len=64, paged=True,
+                                       page_size=4))
+    pool.set_recovery_policy(render_policy(
+        {"domains": ["placement", "recovery"], "recovery_mode": "recompute",
+         "backoff_base_s": 0.005}, name="t").recovery_policy())
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    for rid, p in PROMPTS.items():
+        pool.submit("m", Request(rid=rid, prompt=list(p), max_new_tokens=6))
+    for eng in pool.engines:
+        eng.step(); eng.step()
+    assert e0.page_pool.used_pages > 0
+    rep = pool.fail(e0, deny_export=True)
+    assert rep.leaked_pages == 0
+    assert e0.page_pool.used_pages == 0        # slot AND prefix-cache refs
+    pool.run_until_drained()
+    assert len(pool.finished) + len(pool.shed_requests) == len(PROMPTS)
+
+
+# --------------------------------------------------------------------------- #
+# retry budget + capped exponential backoff
+# --------------------------------------------------------------------------- #
+def test_requeue_backoff_doubles_caps_and_exhausts_the_budget():
+    pool = _pool({"retry_budget": 3, "backoff_base_s": 0.1,
+                  "backoff_cap_s": 0.3}, now_fn=lambda: 100.0)
+    req = Request(rid=9, prompt=[1, 2], max_new_tokens=2)
+    delays = []
+    for _ in range(3):
+        assert pool._requeue_failed("m", req, 100.0)
+        delays.append(req.not_before - 100.0)
+    assert delays == pytest.approx([0.1, 0.2, 0.3])    # doubled, then capped
+    assert req.retries == 3 and pool.requeued_requests == 3
+    assert not pool._requeue_failed("m", req, 100.0)   # budget spent: shed
+    assert pool.retry_exhausted == 1
+    assert [r.rid for r in pool.shed_requests] == [9]
+
+
+def test_backoff_window_is_waited_out_not_busy_spun():
+    clock = {"t": 0.0}
+    waits = []
+
+    def wait(dt):
+        waits.append(dt)
+        clock["t"] += dt
+
+    pool = _pool({"recovery_mode": "recompute", "backoff_base_s": 0.05,
+                  "backoff_cap_s": 1.0},
+                 now_fn=lambda: clock["t"], wait_fn=wait)
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    assert pool.submit("m", Request(rid=0, prompt=[5, 9, 11],
+                                    max_new_tokens=4))
+    rep = pool.fail(e0)                        # rid0 was queued, not active
+    assert rep.requeued == 1
+    [(_, queued)] = pool.backlog
+    assert queued.not_before == pytest.approx(0.05)
+    pool.run_until_drained()
+    assert waits and clock["t"] >= 0.05        # slept through the window
+    [s] = pool.finished
+    assert s.request.rid == 0 and s.request.retries == 1
+
+
+# --------------------------------------------------------------------------- #
+# straggler detection / quarantine
+# --------------------------------------------------------------------------- #
+def test_straggler_quarantine_biases_routing_and_releases_on_recovery():
+    pool = _pool({"straggler_factor": 3.0}, max_replicas_per_group=3)
+    pool.reconfigure(Plan((GB,)))
+    e0, e1, e2 = pool.engines
+    for e, ema in zip(pool.engines, (0.1, 0.1, 1.0)):
+        e.step_ema_s, e.health_samples = ema, 8
+    pool._detect_stragglers()
+    assert pool.straggler_quarantines == 1
+    for i in range(4):
+        assert pool.submit("m", Request(rid=i, prompt=[1, 2],
+                                        max_new_tokens=1))
+    assert e2.load == 0 and e0.load + e1.load == 4   # straggler takes no work
+    e2.step_ema_s = 0.1                              # EMA recovered
+    pool._detect_stragglers()
+    assert pool.submit("m", Request(rid=9, prompt=[1, 2], max_new_tokens=1))
+    assert e2.load == 1                              # released: routable again
+
+
+def test_step_time_ema_tracks_injected_slowdown():
+    pool = _pool()
+    pool.reconfigure(Plan((GA,)))
+    e_fast, e_slow = pool.engines
+    e_slow.fault_slowdown = 200.0
+    for rid, e in ((0, e_fast), (1, e_slow)):
+        e.submit(Request(rid=rid, prompt=[3, 4, 5], max_new_tokens=8))
+    for _ in range(4):                         # decode budget outlasts these
+        e_fast.step(); e_slow.step()
+    assert e_fast.health_samples == 4 and e_slow.health_samples == 4
+    assert e_slow.step_ema_s > 3.0 * e_fast.step_ema_s
+
+
+# --------------------------------------------------------------------------- #
+# degraded-capacity admission clamp
+# --------------------------------------------------------------------------- #
+def test_degraded_pool_sheds_ingress_past_the_admit_cap():
+    pool = _pool({"degraded_admit_cap": 1.0})
+    pool.reconfigure(Plan((GA,)))
+    _, e1 = pool.engines
+    pool.fail(e1)
+    assert pool.degraded()                     # 1 of 2 target replicas left
+    for i in range(3):                         # cap × n_slots = 3 outstanding
+        assert pool.submit("m", Request(rid=i, prompt=[1, 2],
+                                        max_new_tokens=1))
+    extra = Request(rid=7, prompt=[1, 2], max_new_tokens=1)
+    assert not pool.submit("m", extra)         # clamp sheds at the gate
+    assert pool.submit("m", extra, force=True)  # forced progress bypasses it
+    pool.run_until_drained()
+    assert len(pool.finished) == 4
+
+
+# --------------------------------------------------------------------------- #
+# circuit breaker over evolved hooks
+# --------------------------------------------------------------------------- #
+def test_breaker_trips_after_consecutive_hook_failures_and_resets():
+    pool = _pool()
+    pool.reconfigure(Plan((GA,)))
+
+    def boom(ctx):
+        raise ValueError("evolved hook crash-loop")
+
+    pool.set_request_policy(RequestPolicy(admit_fn=boom,
+                                          prioritize_fn=lambda c: 0.0,
+                                          name="crash"))
+    for i in range(5):                         # threshold consecutive errors
+        assert pool.submit("m", Request(rid=i, prompt=[1, 2],
+                                        max_new_tokens=1))
+    assert pool.breaker.tripped("request")
+    assert pool.breaker.open_domains == ("request",)
+    assert pool.breaker.trips["request"] == 1
+    errors_at_trip = pool.policy_errors
+    # open breaker: the hook is skipped entirely, default admission applies
+    assert pool.submit("m", Request(rid=9, prompt=[1, 2], max_new_tokens=1))
+    assert pool.policy_errors == errors_at_trip
+    # installing fresh hooks closes the breaker
+    pool.set_request_policy(RequestPolicy(admit_fn=lambda c: True,
+                                          prioritize_fn=lambda c: 0.0))
+    assert not pool.breaker.tripped("request")
+
+
+def test_broken_recovery_hook_falls_back_to_salvage():
+    pool = _pool()
+    rp = render_policy({"domains": ["placement", "recovery"]},
+                       name="t").recovery_policy()
+    rp.mode_fn = lambda f: 1 / 0               # evolved hook dies at call time
+    pool.set_recovery_policy(rp)
+    pool.reconfigure(Plan((GA,)))
+    e0, _ = pool.engines
+    fts = _load_and_snapshot(pool)
+    rep = pool.fail(e0)
+    assert rep.salvaged == 2                   # lossless default despite crash
+    assert pool.policy_errors == 2
+    pool.run_until_drained()
+    _check_outputs_and_accounting(pool, fts)
+
+
+# --------------------------------------------------------------------------- #
+# drain-stall containment
+# --------------------------------------------------------------------------- #
+def test_run_until_drained_raises_instead_of_silently_stalling():
+    eng = Engine(CFG, PARAMS, n_slots=1, max_seq_len=64)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    with pytest.raises(DrainStallError):
+        eng.run_until_drained(max_steps=2)
+    pool = _pool()
+    pool.reconfigure(Plan((GA,)))
+    pool.submit("m", Request(rid=1, prompt=[1, 2, 3], max_new_tokens=8))
+    with pytest.raises(DrainStallError):
+        pool.run_until_drained(max_steps=1)
+
+
+# --------------------------------------------------------------------------- #
+# control plane integration: fault replay, breaker surfacing, canary guard
+# --------------------------------------------------------------------------- #
+MODELS = {m.name: m for m in QWEN25_FAMILY.values()}
+SIM = Simulator(MODELS, HARDWARE)
+EV = Evaluator(SIM, MODELS, HARDWARE, candidate_timeout_s=20.0)
+
+# a kill every interval; long decodes keep slots in flight when it lands
+KILL_SCHEDULE = tuple(FailureEvent(step=i, kind="kill", engine_idx=i,
+                                   deny_export=(i % 2 == 1))
+                      for i in range(8))
+
+# a crash-looping request program: every hook raises (a program whose admit
+# fails but whose prioritize succeeds keeps resetting the consecutive count —
+# the breaker measures whole-domain health, not a single hook)
+BAD_HOOK_SOURCE = ('POLICY_DOMAINS = ("request",)\n'
+                   'def admit(r):\n'
+                   '    raise ValueError("boom")\n'
+                   'def prioritize(r):\n'
+                   '    raise ValueError("boom")\n')
+
+
+def _faulty_trace(n=6):
+    c = ClusterState((("H100-80G", 8),))
+    w = (Workload(QWEN25_FAMILY["7B"].name, 2048, 256, 4096),)
+    obs = tuple(TimestampObservation(i, float(i), w, c) for i in range(n))
+    return Trace("faulty", obs, (QWEN25_FAMILY["7B"].name,))
+
+
+def test_bad_recovery_policy_is_rolled_back_by_the_canary_guard():
+    """The planted pathological policy sheds every request a failure
+    touches — which looks GOOD on TTFT (only survivors are timed) — and the
+    canary guard's shed-rate check catches it and restores the incumbent's
+    recovery hooks."""
+    inj = FaultInjector(schedule=KILL_SCHEDULE)
+    backend = ShadowBackend(SIM, seed=0, max_replicas_per_group=2,
+                            faults=inj)
+    stage = PolicyStage()
+    dp = DataPlane(EV, seed_policies()["retry-migrate"], stage,
+                   SnapshotBuffer(), backend=backend)
+    tr = _faulty_trace()
+    out = dp.step(tr.observations[0])          # trailing incumbent window
+    dp.step(tr.observations[1])
+    assert inj.kills >= 1 and backend.pool.failures >= 1
+    assert not backend.pool.shed_requests      # incumbent absorbs the kills
+    stage.publish(Policy(source=BAD_RECOVERY_SOURCE, name="shedder"),
+                  ticket=CanaryTicket(intervals=2, max_regression=0.5,
+                                      policy_name="shedder"))
+    out = dp.step(tr.observations[2])
+    assert out["canary"]["status"] == "running"
+    out = dp.step(tr.observations[3])
+    assert out["canary"]["status"] == "rolled_back"
+    assert dp.rollbacks == 1 and dp.commits == 0
+    assert "shed" in dp.rollback_reasons[0]
+    assert stage.quarantined(BAD_RECOVERY_SOURCE)
+    # the incumbent's recovery hooks are live again after the rollback
+    assert backend.pool.recovery_policy is not None
+    assert backend.pool.recovery_policy.name == "retry-migrate"
+    out = dp.step(tr.observations[4])          # serving continues undisturbed
+    assert out["plan"] is not None and out["canary"] is None
+
+
+def test_failures_and_breaker_state_surface_in_the_step_report():
+    inj = FaultInjector(schedule=KILL_SCHEDULE)
+    backend = ShadowBackend(SIM, seed=0, max_replicas_per_group=2,
+                            faults=inj)
+    dp = DataPlane(EV, seed_policies()["retry-migrate"], PolicyStage(),
+                   SnapshotBuffer(), backend=backend)
+    tr = _faulty_trace()
+    dp.step(tr.observations[0])
+    out = dp.step(tr.observations[1])
+    assert out["failures"] >= 1                # per-step failure delta
+    assert out["breaker_open"] == ()
+
+
+def test_breaker_trip_is_reported_and_quarantines_the_source():
+    backend = ShadowBackend(SIM, seed=1)
+    stage = PolicyStage()
+    dp = DataPlane(EV, seed_policies()["greedy-reactive"], stage,
+                   SnapshotBuffer(), backend=backend)
+    tr = _faulty_trace()
+    dp.step(tr.observations[0])
+    stage.publish(Policy(source=BAD_HOOK_SOURCE, name="crasher"))
+    out1 = dp.step(tr.observations[1])         # hooks swap in, then crash-loop
+    out2 = dp.step(tr.observations[2])
+    assert "request" in (out1["breaker_open"] + out2["breaker_open"])
+    errors = (backend.pool.policy_errors
+              + sum(e.policy_errors for e in backend.pool.engines))
+    assert errors >= 5                         # admit at the gate + prioritize
+    # the trip lands the crash-looping source in the quarantine ledger
+    assert stage.quarantined(BAD_HOOK_SOURCE)

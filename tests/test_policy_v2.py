@@ -106,16 +106,19 @@ def test_unknown_domain_rejected():
 # genome → render → parse golden round-trip
 # --------------------------------------------------------------------------- #
 GOLDEN_GENOME_LINE = GENOME_PREFIX + (
-    '{"admit_load_cap": 0.0, "allow_split": false, "batch_scheme": "pow2", '
-    '"domains": ["placement", "request"], "heterogeneity_aware": true, '
+    '{"admit_load_cap": 0.0, "allow_split": false, "backoff_base_s": 0.02, '
+    '"backoff_cap_s": 2.0, "batch_scheme": "pow2", '
+    '"degraded_admit_cap": 0.0, "domains": ["placement", "request"], '
+    '"fail_replan": false, "heterogeneity_aware": true, '
     '"intra_node_only": false, "kv_admit_min_pages": 1, '
     '"kv_evict_kind": "lru", "kv_pin_hits": 4, '
     '"migrate_min_progress": 0.0, '
     '"migration_keep_threshold": 0.0, "migration_mode": "drain", '
     '"min_interval": 1, "preempt": false, "priority_kind": "sjf", '
-    '"reconfig_penalty": 0.0, "scheduler": "greedy", "shift_threshold": 0.3, '
-    '"slo_ttft_s": 2.0, "time_budget": 2.0, "tp_floor_large": 0, '
-    '"trigger_kind": "always", "weighted_obj": false}')
+    '"reconfig_penalty": 0.0, "recovery_mode": "salvage", '
+    '"retry_budget": 3, "scheduler": "greedy", "shift_threshold": 0.3, '
+    '"slo_ttft_s": 2.0, "straggler_factor": 0.0, "time_budget": 2.0, '
+    '"tp_floor_large": 0, "trigger_kind": "always", "weighted_obj": false}')
 
 
 def test_genome_render_parse_golden_roundtrip():

@@ -1,0 +1,40 @@
+"""Deadline/budget plumbing: worker-thread deadline enforcement, error
+propagation through the deadline wrapper, and the evolution-cycle clock."""
+import time
+
+import pytest
+
+from repro.core.timeouts import (CandidateTimeout, EvolutionClock,
+                                 EvolutionTimeout, run_with_deadline)
+
+
+def test_run_with_deadline_returns_result_and_wall_clock():
+    out, dt = run_with_deadline(lambda: 42, deadline_s=5.0)
+    assert out == 42
+    assert 0.0 <= dt < 5.0
+
+
+def test_run_with_deadline_propagates_the_workers_error():
+    def boom():
+        raise KeyError("inner failure")
+
+    with pytest.raises(KeyError, match="inner failure"):
+        run_with_deadline(boom, deadline_s=5.0)
+
+
+def test_run_with_deadline_raises_on_a_slow_candidate():
+    with pytest.raises(CandidateTimeout):
+        run_with_deadline(lambda: time.sleep(2.0), deadline_s=0.05)
+
+
+def test_evolution_clock_tracks_elapsed_and_remaining():
+    clk = EvolutionClock(budget_s=60.0)
+    clk.check()                                # generous budget: no raise
+    assert clk.elapsed >= 0.0
+    assert 0.0 < clk.remaining <= 60.0
+
+
+def test_evolution_clock_raises_once_the_budget_is_spent():
+    spent = EvolutionClock(budget_s=0.0)
+    with pytest.raises(EvolutionTimeout):
+        spent.check()
