@@ -45,6 +45,61 @@ def decode_rows() -> list:
     return rows
 
 
+def sharded_rows() -> list:
+    """TP-sharded decode matmul and expert-parallel moe_gmm on the host
+    mesh (forced host devices in CI).  Output parity against the unsharded
+    computation is asserted — these rows time the sharded correctness path,
+    not kernels in isolation."""
+    rows = []
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        rows.append(("kernel/sharded", 0.0,
+                     f"SKIPPED: {n_dev} device(s); set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count=8"))
+        return rows
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    tp = 2
+    mesh = Mesh(np.array(jax.devices()[:tp], dtype=object).reshape(1, tp),
+                ("data", "model"))
+
+    # TP decode matmul: x (B,d) @ W (d, f) with W column-sharded — the
+    # Megatron up-projection shape of one decode step
+    B, d, f = 8, 512, 2048
+    x = jax.random.normal(KEY, (B, d), jnp.float32)
+    w = jax.random.normal(KEY, (d, f), jnp.float32) * 0.05
+    ref = x @ w
+    w_sh = jax.device_put(w, NamedSharding(mesh, P(None, "model")))
+    x_rep = jax.device_put(x, NamedSharding(mesh, P()))
+    mm = jax.jit(lambda a, b: a @ b)
+    out, us = timed(lambda: mm(x_rep, w_sh).block_until_ready(), repeat=5)
+    assert jnp.allclose(out, ref, atol=1e-4), \
+        "TP-sharded decode matmul diverged from unsharded"
+    rows.append((f"kernel/tp_decode_matmul_tp{tp}", us,
+                 f"B{B} d{d} f{f} col-sharded"))
+
+    # expert-parallel moe_gmm: the ep_moe_mix shard_map path vs the dense
+    # mix over the same gates/weights
+    from repro.configs import get_config
+    from repro.distributed.expert_parallel import ep_moe_mix
+    from repro.models.layers import init_moe, moe_dense_mix
+    import dataclasses
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              dtype="float32")
+    p = init_moe(jax.random.PRNGKey(1), cfg)
+    xt = jax.random.normal(KEY, (2, 16, cfg.d_model), jnp.float32) * 0.3
+    ref = moe_dense_mix(p, cfg, xt)
+    run_ep = jax.jit(lambda pp, xx: ep_moe_mix(pp, cfg, xx, mesh))
+    out, us = timed(lambda: run_ep(p, xt).block_until_ready(), repeat=3)
+    assert jnp.allclose(out, ref, atol=1e-5), \
+        "expert-parallel moe_gmm diverged from dense mix"
+    rows.append((f"kernel/ep_moe_gmm_tp{tp}",
+                 us, f"E{cfg.n_experts}/{tp} shards B2 S16 d{cfg.d_model}"))
+    return rows
+
+
 def run() -> list:
     rows = []
     from repro.kernels.flash_attention import ops as fa
@@ -83,11 +138,13 @@ def run() -> list:
                                         chunk=64).block_until_ready(),
                     repeat=3)
     rows.append(("kernel/ssd_scan_256", us, "b1 s256 h4 p32 n16"))
+    rows.extend(sharded_rows())
     return rows
 
 
 if __name__ == "__main__":
     import sys
-    # --smoke: just the contiguous-vs-paged decode pair (the CI wiring for
-    # the paged-decode microbench; full run() covers every kernel)
-    emit(decode_rows() if "--smoke" in sys.argv[1:] else run())
+    # --smoke: the contiguous-vs-paged decode pair plus the sharded rows
+    # (the multi-device CI job forces 8 host devices so both run for real)
+    emit(decode_rows() + sharded_rows() if "--smoke" in sys.argv[1:]
+         else run())

@@ -52,8 +52,63 @@ def measured_reuse(default: float = 0.5) -> float:
     return default
 
 
+def tp_dp_table(arch_names=("qwen2.5-1.5b", "qwen2.5-7b"),
+                gpu_name: str = "TPU-v5e", budget: int = 8,
+                batch: int = 8, prefill: int = 256, decode: int = 64) -> list:
+    """Analytic TP×DP placement table for a fixed device budget: per-step
+    serve time (Eqs. 3–6 at honest/effective TP), per-step collective
+    wall-clock, and the shape-aware rebuild cost — the same three terms the
+    shadow rung ranks placements by, tabulated without compiling anything.
+    """
+    from repro.core.plan import HARDWARE, QWEN25_FAMILY
+    from repro.core.simulator import Simulator
+    from repro.distributed import hlo_analysis
+
+    models = {z.name: z for z in QWEN25_FAMILY.values()}
+    sim = Simulator(models, HARDWARE)
+    gpu = HARDWARE[gpu_name]
+    out = []
+    for name in arch_names:
+        z = models[name]
+        for tp in (1, 2, 4, 8):
+            for dp in (1, 2, 4, 8):
+                if tp * dp > budget or batch % dp:
+                    continue
+                eff = hlo_analysis.effective_tp(z, tp)
+                b_shard = batch // dp
+                step_s = (sim.prefill_time(z, gpu, eff, b_shard, prefill)
+                          + sim.decode_time(z, gpu, eff, b_shard, prefill,
+                                            decode))
+                out.append({
+                    "model": name, "gpu": gpu_name, "tp": tp, "dp": dp,
+                    "devices": tp * dp, "effective_tp": eff,
+                    "tp_fallback_fraction":
+                        hlo_analysis.tp_fallback_fraction(z, tp),
+                    "serve_s": step_s,
+                    "collective_s": hlo_analysis.step_collective_s(
+                        z, gpu, tp, b_shard, 1) * decode,
+                    "rebuild_s": hlo_analysis.rebuild_cost_s(z, gpu, tp),
+                })
+    return out
+
+
 def run() -> list:
     rows: list = []
+    # the TP×DP table is purely analytic — emitted even with no dry-run
+    # artifacts so the placement-shape ranking is always inspectable
+    shapes = tp_dp_table()
+    best = {}
+    for r in shapes:
+        cur = best.get(r["model"])
+        if cur is None or r["serve_s"] < cur["serve_s"]:
+            best[r["model"]] = r
+    for m, r in sorted(best.items()):
+        rows.append((f"roofline/tp_dp/{m}", r["serve_s"] * 1e6,
+                     f"best tp={r['tp']} dp={r['dp']} "
+                     f"serve={r['serve_s']:.3f}s "
+                     f"coll={r['collective_s'] * 1e3:.2f}ms "
+                     f"rebuild={r['rebuild_s']:.2f}s"))
+    save_json("roofline_tp_dp", shapes)
     if not DRYRUN.exists():
         rows.append(("roofline/missing", 0.0,
                      "run: PYTHONPATH=src python -m repro.launch.dryrun"))

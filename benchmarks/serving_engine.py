@@ -318,21 +318,118 @@ def _assert_reuse(reuse: dict, min_speedup: float = 1.5) -> None:
          f"below the {min_speedup}x target")
 
 
+def tp_dp_sweep(arch: str = "qwen2-1.5b", intervals: int = 2) -> dict:
+    """Measured TP×DP placement sweep through the real data plane: one
+    JaxBackend per shape, the plan applied via ``apply_plan`` (so replicas
+    are ShardedEngines on carved submeshes), tok/s measured over real
+    serve intervals.  The sweep picks the measured-best shape as "chosen"
+    and the smoke gate asserts it strictly beats the measured-worst — the
+    sweep must discriminate placements, not report a flat line.  Each row
+    also records the analytic serve cost (the Eqs. 3–6 terms the shadow
+    rung ranks by, at honest effective TP) so prediction-vs-measurement
+    drift is inspectable; no assert ties them — forced host devices share
+    one CPU, so the TPU roofline does not rank them."""
+    from repro.core.plan import (HARDWARE, Plan, ReplicaGroup, Workload,
+                                 spec_from_config)
+    from repro.core.simulator import Simulator
+    from repro.distributed import hlo_analysis
+    from repro.serving.backend import make_jax_backend
+
+    n_dev = len(jax.devices())
+    shapes = [(1, 1), (2, 1)]            # (tp, dp)
+    if n_dev >= 4:
+        shapes += [(1, 2), (2, 2)]
+    if n_dev < 2:
+        return {"skipped": f"{n_dev} device(s); set XLA_FLAGS="
+                           f"--xla_force_host_platform_device_count=8"}
+
+    model = "m"
+    w = Workload(model, batch=6, prefill_len=64 * 16, decode_len=256 * 4)
+    out = {"shapes": {}}
+    gpu = HARDWARE["TPU-v5e"]
+    sim = Simulator({}, HARDWARE)
+    for tp, dp in shapes:
+        backend = make_jax_backend(arch, max_new_tokens=4,
+                                   requests_per_model=4)
+        z = spec_from_config(backend.cfg)
+        plan = Plan((ReplicaGroup(model, "TPU-v5e", tp, batch=4, count=1,
+                                  dp=dp),))
+        backend.apply_plan(plan, None)
+        eng = backend.pool.engines[0]
+        sharded = type(eng).__name__ == "ShardedEngine"
+        assert sharded == (tp * dp > 1), \
+            f"shape ({tp},{dp}) built {type(eng).__name__}"
+        backend.serve_interval([w])      # warm the jit caches
+        t0 = time.monotonic()
+        toks = 0
+        for _ in range(intervals):
+            met = backend.serve_interval([w])
+            toks += met.tokens
+        tok_s = toks / (time.monotonic() - t0)
+        eff = hlo_analysis.effective_tp(z, tp)
+        pred = (sim.prefill_time(z, gpu, eff, 4 // min(dp, 4), 16)
+                + sim.decode_time(z, gpu, eff, 4 // min(dp, 4), 16, 4)) / dp
+        out["shapes"][f"tp{tp}_dp{dp}"] = {
+            "tp": tp, "dp": dp, "devices": tp * dp, "sharded": sharded,
+            "measured_tok_s": tok_s, "predicted_serve_s": pred,
+            "effective_tp": eff,
+            "rebuild_s": hlo_analysis.rebuild_cost_s(z, gpu, tp),
+        }
+    by_meas = sorted(out["shapes"].values(), key=lambda r: r["measured_tok_s"])
+    by_pred = sorted(out["shapes"].values(),
+                     key=lambda r: r["predicted_serve_s"])
+    out["chosen"] = f"tp{by_meas[-1]['tp']}_dp{by_meas[-1]['dp']}"
+    out["measured_worst"] = f"tp{by_meas[0]['tp']}_dp{by_meas[0]['dp']}"
+    out["predicted_best"] = f"tp{by_pred[0]['tp']}_dp{by_pred[0]['dp']}"
+    out["chosen_tok_s"] = by_meas[-1]["measured_tok_s"]
+    out["worst_tok_s"] = by_meas[0]["measured_tok_s"]
+    return out
+
+
+def _assert_tp_dp(sweep: dict) -> None:
+    if "skipped" in sweep:
+        return
+    assert len(sweep["shapes"]) >= 2, "sweep needs at least two shapes"
+    assert any(r["sharded"] for r in sweep["shapes"].values()), \
+        "sweep exercised no sharded replica"
+    assert sweep["chosen"] != sweep["measured_worst"] \
+        and sweep["chosen_tok_s"] > sweep["worst_tok_s"], (
+        f"TP×DP sweep failed to discriminate shapes: chosen "
+        f"{sweep['chosen']} ({sweep['chosen_tok_s']:.1f} tok/s) vs worst "
+        f"{sweep['measured_worst']} ({sweep['worst_tok_s']:.1f} tok/s)")
+
+
 def run_smoke(arch: str = "qwen2-1.5b") -> list:
-    """CI smoke: the shared-prefix sweep only — asserts prefix caching wins
-    ≥1.5x mean TTFT over the no-reuse baseline at ≥50% observed reuse, with
-    greedy outputs unchanged (checked inside the sweep).  Extends the
-    tracked full-run artifact in place rather than clobbering it."""
+    """CI smoke: the shared-prefix sweep (asserts prefix caching wins ≥1.5x
+    mean TTFT over the no-reuse baseline at ≥50% observed reuse, with
+    greedy outputs unchanged) plus — on multi-device hosts — the TP×DP
+    placement sweep (asserts the measured-best shape strictly beats the
+    measured-worst).  Extends the tracked full-run artifact in place rather
+    than clobbering it."""
     reuse = prefix_reuse_sweep(arch=arch)
     if reuse["ttft_speedup"] < 1.5:      # one re-measure guards CI noise
         again = prefix_reuse_sweep(arch=arch)
         reuse = max((reuse, again), key=lambda r: r["ttft_speedup"])
     _assert_reuse(reuse)
+    sweep = tp_dp_sweep(arch=arch)
+    _assert_tp_dp(sweep)
     path = ARTIFACTS / "serving_engine.json"
     payload = json.loads(path.read_text()) if path.exists() else {}
-    payload.update({"arch": arch, "prefix_reuse_sweep": reuse})
+    payload.update({"arch": arch, "prefix_reuse_sweep": reuse,
+                    "tp_dp_sweep": sweep})
     save_json("serving_engine", payload)
-    return _reuse_rows(arch, reuse)
+    rows = _reuse_rows(arch, reuse)
+    if "skipped" in sweep:
+        rows.append(("serving/tp_dp_sweep", 0.0,
+                     f"SKIPPED: {sweep['skipped']}"))
+    else:
+        rows.append((
+            "serving/tp_dp_sweep", 0.0,
+            f"chosen={sweep['chosen']} {sweep['chosen_tok_s']:.0f}tok/s "
+            f"worst={sweep['measured_worst']} "
+            f"{sweep['worst_tok_s']:.0f}tok/s "
+            f"predicted_best={sweep['predicted_best']}"))
+    return rows
 
 
 if __name__ == "__main__":

@@ -115,6 +115,7 @@ _CATEGORICAL = {
     "batch_scheme": ["pow2", "sweet", "exhaustive"],
     "trigger_kind": ["always", "threshold", "periodic", "hybrid"],
     "tp_floor_large": [0, 2, 4],
+    "replica_dp": [1, 2, 4],
     "intra_node_only": [False, True],
     "heterogeneity_aware": [True, False],
     "weighted_obj": [False, True],

@@ -150,14 +150,23 @@ class ReplicaGroup:
     tp: int
     batch: int                 # per-replica concurrent batch
     count: int                 # number of replicas
+    # intra-replica data parallelism: each replica's submesh is (dp, tp) and
+    # its batch is sharded dp-ways, so one replica owns tp·dp devices.
+    # Trailing default keeps every positional ReplicaGroup(...) call working.
+    dp: int = 1
 
     @property
     def devices(self) -> int:
-        return self.tp * self.count
+        return self.tp * self.dp * self.count
 
     @property
     def capacity(self) -> int:
         return self.batch * self.count
+
+    @property
+    def submesh_shape(self) -> Tuple[int, int]:
+        """(data, model) mesh shape of one replica."""
+        return (self.dp, self.tp)
 
 
 @dataclass(frozen=True)
@@ -173,9 +182,11 @@ class Plan:
             used[g.gpu_type] = used.get(g.gpu_type, 0) + g.devices
         return used
 
-    def placement(self, model: str) -> Tuple[Tuple[str, int, int], ...]:
-        """Hashable (gpu_type, tp, count) tuple per model — reconfig diffing."""
-        return tuple(sorted((g.gpu_type, g.tp, g.count)
+    def placement(self, model: str) -> Tuple[Tuple[str, int, int, int], ...]:
+        """Hashable (gpu_type, tp, dp, count) tuple per model — reconfig
+        diffing.  dp joins tp so a TP×DP reshape of the same device budget
+        registers as a placement change."""
+        return tuple(sorted((g.gpu_type, g.tp, g.dp, g.count)
                             for g in self.groups if g.model == model))
 
 

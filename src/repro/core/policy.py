@@ -75,6 +75,7 @@ DEFAULT_GENOME: Dict[str, Any] = {
     "time_budget": 2.0,             # B&B anytime deadline (thoroughness)
     "batch_scheme": "pow2",         # pow2 | sweet | exhaustive
     "tp_floor_large": 0,            # App. G parallel-strategy constraint
+    "replica_dp": 1,                # intra-replica data parallelism (TP×DP)
     "intra_node_only": False,       # §7.2 (i): bound TP within a node
     "heterogeneity_aware": True,    # §7.2 (iv)
     "weighted_obj": False,          # Eq. 23
@@ -508,6 +509,9 @@ def _base_plan(ctx):
 def schedule(ctx):
     sim = ctx.simulator
     new = _base_plan(ctx)
+    if G.get("replica_dp", 1) > 1:
+        # widen replicas to (dp, tp) submeshes where devices/batch allow
+        new = schedulers.apply_replica_dp(new, ctx, G["replica_dp"])
     old = ctx.current_plan
     if old is None or not old.groups:
         return new

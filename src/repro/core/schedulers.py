@@ -51,12 +51,28 @@ def batch_candidates(total_batch: int, scheme: str = "pow2",
     return sorted(b for b in cand if b <= min(total_batch, max_batch))
 
 
+def tp_shardable(z: ModelSpec, t: int) -> bool:
+    """Physical TP feasibility: Megatron head sharding needs the q-head
+    count divisible by t; MoE models may instead shard the expert axis
+    (expert parallelism), so a divisible expert count also qualifies.
+    Mirrors ``distributed.sharding._tp_compatible`` on the ModelSpec side —
+    the shared ``plan_feasible`` guard enforces the same rule, so filtering
+    here keeps every scheduler's plans physically buildable."""
+    if t <= 1:
+        return True
+    if z.n_heads and z.n_heads % t == 0:
+        return True
+    return bool(z.n_experts and z.n_experts % t == 0)
+
+
 def tp_candidates(z: ModelSpec, g_name: str, ctx: Ctx,
                   tp_floor_large: int = 0, intra_node_only: bool = False
                   ) -> List[int]:
     g = ctx.hardware[g_name]
     out = []
     for t in TP_DEGREES:
+        if not tp_shardable(z, t):
+            continue
         if intra_node_only and t > g.devices_per_node:
             continue
         if t > ctx.cluster.count(g_name):
@@ -78,6 +94,34 @@ def gpu_order(z: ModelSpec, ctx: Ctx, heterogeneity_aware: bool = True
         return types
     big = z.weight_bytes > 25e9
     return sorted(types, key=lambda g: ctx.hardware[g].flops, reverse=big)
+
+
+def apply_replica_dp(plan: Plan, ctx: Ctx, dp: int) -> Plan:
+    """Post-pass widening each replica to a (dp, tp) submesh when devices
+    allow — the ``replica_dp`` genome knob's entry point.
+
+    Deterministic and auto-falling-back: groups are widened in plan order;
+    a group keeps dp=1 when the cluster lacks the extra devices, when its
+    per-replica batch is too small to shard dp-ways, or when dp would not
+    divide the batch.  The widened plan is always feasible if the input
+    plan was (device budget re-checked against the cluster here; memory
+    cannot get worse — dp shards the same batch over more devices)."""
+    dp = int(dp)
+    if dp <= 1 or not plan.groups:
+        return plan
+    free = {g: ctx.cluster.count(g) for g in ctx.cluster.types()}
+    for g in plan.groups:
+        free[g.gpu_type] = free.get(g.gpu_type, 0) - g.devices
+    out = []
+    for g in plan.groups:
+        extra = g.tp * (dp - 1) * g.count
+        if (g.dp == 1 and g.batch >= dp and g.batch % dp == 0
+                and free.get(g.gpu_type, 0) >= extra):
+            free[g.gpu_type] -= extra
+            g = ReplicaGroup(g.model, g.gpu_type, g.tp, g.batch, g.count,
+                             dp=dp)
+        out.append(g)
+    return Plan(tuple(out))
 
 
 # --------------------------------------------------------------------------- #

@@ -202,8 +202,16 @@ class Simulator:
                 return False, f"{g_name}: need {n} > have {cluster.count(g_name)}"
         lens = {w.model: w.prefill_len + w.decode_len for w in (workloads or [])}
         for g in plan.groups:
-            if g.count <= 0 or g.tp <= 0 or g.batch <= 0:
+            if g.count <= 0 or g.tp <= 0 or g.batch <= 0 or g.dp <= 0:
                 return False, f"degenerate group {g}"
+            z = self.models.get(g.model)
+            if z is not None and g.tp > 1:
+                heads_ok = z.n_heads and z.n_heads % g.tp == 0
+                experts_ok = z.n_experts and z.n_experts % g.tp == 0
+                if not (heads_ok or experts_ok):
+                    return False, (f"tp={g.tp} unshardable for {g.model} "
+                                   f"(n_heads={z.n_heads}, "
+                                   f"n_experts={z.n_experts})")
             if not self.fits(g.model, g.gpu_type, g.tp, g.batch,
                              lens.get(g.model, 2048)):
                 return False, f"OOM {g.model} on {g.gpu_type} tp={g.tp} b={g.batch}"

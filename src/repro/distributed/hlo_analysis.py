@@ -321,3 +321,56 @@ class RooflineTerms:
             "roofline_fraction": self.roofline_fraction,
             "n_chips": self.n_chips,
         }
+
+
+# --------------------------------------------------------------------------- #
+# analytic shape-aware costs for sharded replicas (no compiled module needed)
+#
+# These are the Eq. 6 / Eq. 8 terms expressed per ReplicaGroup shape so the
+# shadow rung and the roofline tables can rank TP-vs-DP trade-offs without
+# compiling every candidate.  ``z`` is a repro.core.plan.ModelSpec and ``g``
+# a repro.core.plan.GPUType (duck-typed: only the named attributes are read).
+# --------------------------------------------------------------------------- #
+def tp_fallback_fraction(z, tp: int) -> float:
+    """Analytic counterpart of ShardingDecision.tp_fallback_fraction: 0.0
+    when the model shards cleanly at this degree (heads divide for dense
+    attention/FFN, or experts divide for the EP path), 1.0 when NEITHER
+    does — the sharding layer would replicate every TP dim and the replica
+    pays tp× devices for 1× compute."""
+    if tp <= 1:
+        return 0.0
+    heads_ok = bool(z.n_heads and z.n_heads % tp == 0)
+    experts_ok = bool(z.n_experts and z.n_experts % tp == 0)
+    return 0.0 if (heads_ok or experts_ok) else 1.0
+
+
+def effective_tp(z, tp: int) -> int:
+    """TP degree the compute actually splits by (1 under full fallback)."""
+    return 1 if tp_fallback_fraction(z, tp) >= 1.0 else max(tp, 1)
+
+
+def tp_collective_bytes_per_token(z, tp: int) -> float:
+    """Eq. 6 traffic: two ring all-reduces per layer over the residual
+    stream, per token, per device — 2 · 2(t−1)/t · L · d · η bytes."""
+    if tp <= 1:
+        return 0.0
+    return (2.0 * 2.0 * (tp - 1) / tp
+            * z.n_layers * z.d_model * z.dtype_bytes)
+
+
+def step_collective_s(z, g, tp: int, batch: int, seq: int = 1) -> float:
+    """Wall-clock of one step's TP collectives for ``batch·seq`` tokens on
+    GPUType ``g`` (intra-node link while the shard fits a node)."""
+    eff = effective_tp(z, tp)
+    if eff <= 1:
+        return 0.0
+    bw = g.intra_bw if eff <= g.devices_per_node else g.inter_bw
+    return tp_collective_bytes_per_token(z, eff) * batch * seq / bw
+
+
+def rebuild_cost_s(z, g, tp: int) -> float:
+    """Shape-aware replica (re)build: each device of a tp-way replica pulls
+    its 1/tp weight shard over PCIe in parallel, so widening TP shrinks the
+    rebuild the shadow rung charges for a placement change."""
+    shard = z.weight_bytes / max(effective_tp(z, tp), 1)
+    return shard / g.pcie_bw

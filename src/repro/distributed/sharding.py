@@ -15,8 +15,9 @@ a 16-way model axis).
 from __future__ import annotations
 
 import math
+import warnings
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -24,6 +25,104 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+
+
+class ShardingFallback(UserWarning):
+    """A requested shard assignment was dropped (dim % axis_size != 0) and
+    the dim replicated instead.  Warned once per (path, dim, axis) so a
+    big pytree doesn't flood logs; recorded in the active
+    :class:`ShardingDecision` so cost models price the replication honestly
+    instead of assuming the requested TP split happened."""
+
+
+@dataclass(frozen=True)
+class FallbackRecord:
+    """One dropped shard assignment: ``path[axis_index]`` of size ``dim``
+    was not divisible by ``axis`` (size ``axis_size``) and fell back to
+    replication."""
+    path: str
+    axis_index: int
+    dim: int
+    axis: str
+    axis_size: int
+
+
+@dataclass
+class ShardingDecision:
+    """What actually got sharded for one (cfg, policy) pair.
+
+    ``param_specs`` are the sanitised PartitionSpecs; ``fallbacks`` lists
+    every dropped assignment.  ``tp_fallback_fraction`` is the share of
+    tensor-parallel assignments that silently replicated — the number
+    ``hlo_analysis`` feeds into collective/rebuild costing so a policy that
+    *requested* tp=8 but got replication is not costed as if it sharded."""
+    mode: str
+    tp_axis: str
+    tp_requested: int
+    ep: bool = False
+    param_specs: Any = None
+    fallbacks: List[FallbackRecord] = field(default_factory=list)
+
+    def _mentions_tp(self, entry) -> bool:
+        if entry is None:
+            return False
+        if isinstance(entry, tuple):
+            return self.tp_axis in entry
+        return entry == self.tp_axis
+
+    @property
+    def tp_fallback_fraction(self) -> float:
+        dropped = sum(1 for f in self.fallbacks
+                      if self.tp_axis in (f.axis or ""))
+        kept = 0
+        if self.param_specs is not None:
+            for spec in jax.tree_util.tree_leaves(
+                    self.param_specs, is_leaf=lambda x: isinstance(x, P)):
+                kept += sum(1 for e in spec if self._mentions_tp(e))
+        return dropped / max(dropped + kept, 1)
+
+    @property
+    def effective_tp(self) -> int:
+        """1 when every TP assignment fell back (weights fully replicated);
+        the requested degree otherwise — partial fallback is carried via
+        ``tp_fallback_fraction`` for Amdahl-style cost adjustments."""
+        return 1 if self.tp_fallback_fraction >= 1.0 else self.tp_requested
+
+
+# warn-once bookkeeping + the decision currently collecting fallbacks;
+# module-level because _sanitize is called from deep inside tree_map
+_WARNED: set = set()
+_ACTIVE_DECISION: Optional[ShardingDecision] = None
+_FALLBACK_PATH: str = ""
+
+
+def _record_fallback(path: str, axis_index: int, dim: int, entry,
+                     axis_size: int) -> None:
+    axis = "+".join(entry) if isinstance(entry, tuple) else str(entry)
+    key = (path, axis_index, axis, dim)
+    if key not in _WARNED:
+        _WARNED.add(key)
+        warnings.warn(
+            f"sharding fallback: {path or '<anon>'}[{axis_index}] dim={dim} "
+            f"not divisible by axis {axis!r} (size {axis_size}); replicating",
+            ShardingFallback, stacklevel=3)
+    if _ACTIVE_DECISION is not None:
+        _ACTIVE_DECISION.fallbacks.append(
+            FallbackRecord(path, axis_index, dim, axis, axis_size))
+
+
+def sharding_decision(cfg: ModelConfig, pol: "ShardingPolicy",
+                      params_sds) -> ShardingDecision:
+    """Compute param specs while recording every divisibility fallback."""
+    global _ACTIVE_DECISION
+    d = ShardingDecision(mode=pol.mode, tp_axis=pol.tp_axis,
+                         tp_requested=pol.tp_size, ep=pol.ep)
+    _ACTIVE_DECISION = d
+    try:
+        d.param_specs = param_pspecs(cfg, pol, params_sds)
+    finally:
+        _ACTIVE_DECISION = None
+    return d
 
 
 @dataclass(frozen=True)
@@ -37,6 +136,10 @@ class ShardingPolicy:
     # axis is free for weight-row sharding with partial-sum matmuls instead
     # of per-step weight all-gathers
     replicate_batch: bool = False
+    # expert parallelism: shard the MoE expert axis on tp_axis (dense-mix
+    # semantics, gate-weighted psum combine) instead of slicing d_ff —
+    # serving-time Mixtral routing through kernels/moe_gmm per shard
+    ep: bool = False
 
     @property
     def tp_size(self) -> int:
@@ -67,13 +170,21 @@ def _tp_compatible(cfg: ModelConfig, tp: int) -> bool:
     return True
 
 
-def make_policy(mesh: Mesh, cfg: Optional[ModelConfig] = None) -> ShardingPolicy:
+def make_policy(mesh: Mesh, cfg: Optional[ModelConfig] = None,
+                ep: Optional[bool] = None) -> ShardingPolicy:
     axes = tuple(mesh.axis_names)
     batch_axes = ("pod", "data") if "pod" in axes else ("data",)
     mode = "tp"
-    if cfg is not None and not _tp_compatible(cfg, mesh.shape["model"]):
+    tp = mesh.shape["model"]
+    if cfg is not None and not _tp_compatible(cfg, tp):
         mode = "fsdp"
-    return ShardingPolicy(mesh, mode=mode, batch_axes=batch_axes)
+    if ep is None:
+        # expert parallelism by default whenever the expert axis divides:
+        # the MoE FFN dominates Mixtral FLOPs and shards losslessly on the
+        # expert axis even when d_ff/head counts would not
+        ep = bool(cfg is not None and cfg.family == "moe" and tp > 1
+                  and cfg.n_experts % tp == 0)
+    return ShardingPolicy(mesh, mode=mode, batch_axes=batch_axes, ep=ep)
 
 
 def _axis_size(mesh: Mesh, entry) -> int:
@@ -84,11 +195,16 @@ def _axis_size(mesh: Mesh, entry) -> int:
     return mesh.shape[entry]
 
 
-def _sanitize(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple) -> P:
-    """Drop axis assignments whose dim isn't divisible by the axis size."""
+def _sanitize(mesh: Mesh, shape: Tuple[int, ...], spec: Tuple,
+              path: str = "") -> P:
+    """Drop axis assignments whose dim isn't divisible by the axis size.
+    Each drop warns once (:class:`ShardingFallback`) and is recorded in the
+    active :class:`ShardingDecision`, so replicated dims are costed
+    honestly downstream instead of assumed sharded."""
     out = []
-    for dim, entry in zip(shape, spec):
+    for i, (dim, entry) in enumerate(zip(shape, spec)):
         if entry is not None and dim % _axis_size(mesh, entry) != 0:
+            _record_fallback(path, i, dim, entry, _axis_size(mesh, entry))
             entry = None
         out.append(entry)
     return P(*out)
@@ -125,9 +241,11 @@ def _param_rule(cfg: ModelConfig, pol: ShardingPolicy, path: Tuple[str, ...],
     if name == "router":
         return (fs, None)
     if in_moe_ffn and name in ("w_gate", "w_up"):
-        return (None, fs, tp)
+        # EP shards the expert axis (whole experts per device, moe_gmm runs
+        # shard-local); TP slices every expert's d_ff instead
+        return (tp, fs, None) if pol.ep else (None, fs, tp)
     if in_moe_ffn and name == "w_down":
-        return (None, tp, fs)
+        return (tp, None, fs) if pol.ep else (None, tp, fs)
     if name in ("wq", "wk", "wv", "w_gate", "w_up"):
         return (fs, tp)
     if name in ("wo", "w_down"):
@@ -161,7 +279,8 @@ def param_pspecs(cfg: ModelConfig, pol: ShardingPolicy, params_sds) -> Any:
     def one(kp, leaf):
         path = _path_names(kp)
         rule = _param_rule(cfg, pol, path, leaf.shape)
-        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule))
+        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule),
+                         path=".".join(path))
 
     return jax.tree_util.tree_map_with_path(one, params_sds)
 
@@ -175,7 +294,8 @@ def opt_pspecs(cfg: ModelConfig, pol: ShardingPolicy, opt_sds) -> Any:
         # strip leading "m"/"v" so the param rules see the real path
         rule_path = path[1:] if path and path[0] in ("m", "v") else path
         rule = _param_rule(cfg, pol, rule_path, leaf.shape)
-        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule))
+        return _sanitize(pol.mesh, leaf.shape, _pad(leaf.shape, rule),
+                         path=".".join(path))
 
     return jax.tree_util.tree_map_with_path(one, opt_sds)
 
@@ -251,7 +371,28 @@ def cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy, cache_sds) -> Any:
             spec = tuple([None] * nstack) + (b, tp, None, None)
         else:
             spec = tuple([None] * len(shape))
-        return _sanitize(pol.mesh, shape, spec)
+        return _sanitize(pol.mesh, shape, spec, path=".".join(path))
+
+    return jax.tree_util.tree_map_with_path(one, cache_sds)
+
+
+def paged_cache_pspecs(cfg: ModelConfig, pol: ShardingPolicy,
+                       cache_sds) -> Any:
+    """Paged KV pool: (L, n_pages, page_size, H, D) shards KV **heads** on
+    the tp axis — page indices are request-local and must stay addressable
+    from every shard, so the page axis replicates and the head axis (which
+    TP attention already splits) carries the partition.  MLA's latent pool
+    has no head axis and replicates."""
+    tp = pol.tp_axis
+
+    def one(kp, leaf):
+        path = _path_names(kp)
+        name = path[-1]
+        if name in ("kp", "vp"):
+            spec = (None, None, None, tp, None)
+        else:                               # ckvp + anything unforeseen
+            spec = tuple([None] * len(leaf.shape))
+        return _sanitize(pol.mesh, leaf.shape, spec, path=".".join(path))
 
     return jax.tree_util.tree_map_with_path(one, cache_sds)
 

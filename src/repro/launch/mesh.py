@@ -2,7 +2,10 @@
 this module never touches jax device state)."""
 from __future__ import annotations
 
+from typing import Sequence, Tuple
+
 import jax
+import numpy as np
 
 
 def make_mesh_compat(shape, axes):
@@ -27,3 +30,30 @@ def make_host_mesh(model_axis: int = 1):
     n = len(jax.devices())
     data = n // model_axis
     return make_mesh_compat((data, model_axis), ("data", "model"))
+
+
+def carve_submeshes(mesh: jax.sharding.Mesh,
+                    shapes: Sequence[Tuple[int, ...]],
+                    axes: Tuple[str, ...] = ("data", "model")):
+    """Partition ``mesh``'s devices into per-replica submeshes.
+
+    Deterministic: devices are consumed in sorted-id order, so the same
+    (mesh, shapes) always yields the same physical assignment — shadow
+    replay and the pool's diff/rebuild both depend on that.  Raises
+    ``ValueError`` when the requested shapes oversubscribe the mesh (the
+    caller — usually the pool's :class:`~repro.serving.sharded
+    .SubmeshAllocator` — decides whether to fall back to smaller shapes).
+    """
+    devices = sorted(mesh.devices.flatten().tolist(), key=lambda d: d.id)
+    need = sum(int(np.prod(s)) for s in shapes)
+    if need > len(devices):
+        raise ValueError(
+            f"carve_submeshes: shapes {list(shapes)} need {need} devices "
+            f"but the mesh has {len(devices)}")
+    out, off = [], 0
+    for s in shapes:
+        n = int(np.prod(s))
+        grid = np.array(devices[off:off + n], dtype=object).reshape(s)
+        out.append(jax.sharding.Mesh(grid, axes[:len(s)]))
+        off += n
+    return out

@@ -1,0 +1,173 @@
+"""Sharded-execution parity driver (run as a subprocess).
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+JAX initialises, so this module forces it at import time and the test suite
+invokes it with ``python -m repro.launch.sharded_check`` rather than
+importing it into the already-initialised test process.
+
+Checks (all token-identical, float32 so greedy argmax is reduction-order
+safe):
+
+  1. dense Megatron-TP replica (qwen2-1.5b reduced, tp=2) vs the
+     single-device engine on the same prompts;
+  2. expert-parallel replica (mixtral-8x7b reduced, tp=2 → 2-way EP through
+     kernels/moe_gmm under shard_map) vs single-device;
+  3. live migration of an in-flight request between replicas of DIFFERENT
+     TP degree (tp=2 → tp=4 and tp=2 → unsharded) mid-decode;
+  4. EnginePool failure recovery where salvage lands on a survivor with a
+     different TP degree.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses  # noqa: E402
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.core.plan import Plan, ReplicaGroup  # noqa: E402
+from repro.models import lm  # noqa: E402
+from repro.serving.engine import Engine, Request  # noqa: E402
+from repro.serving.pool import EnginePool  # noqa: E402
+from repro.serving.sharded import ShardedEngine, SubmeshAllocator  # noqa: E402
+
+MAX_SEQ = 64
+NEW_TOKENS = 8
+
+
+def _setup(arch: str):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg, n=3, length=12):
+    v = cfg.vocab_size
+    return [[(17 * i + 3 * j) % (v - 1) + 1 for j in range(length)]
+            for i in range(n)]
+
+
+def _drain(eng, prompts):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=NEW_TOKENS))
+    done = eng.run_until_drained()
+    return {d.request.rid: list(d.generated) for d in done}
+
+
+def check_parity(arch: str, shape=(1, 2)) -> None:
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg)
+    ref = _drain(Engine(cfg, params, n_slots=2, max_seq_len=MAX_SEQ), prompts)
+
+    alloc = SubmeshAllocator()
+    eng = ShardedEngine(cfg, params, alloc.alloc(shape), allocator=alloc,
+                        n_slots=2, max_seq_len=MAX_SEQ)
+    if cfg.n_experts:
+        assert eng.sharding_policy.ep, "moe config should pick expert parallel"
+    got = _drain(eng, prompts)
+    assert got == ref, (f"{arch} {shape}: sharded tokens diverge\n"
+                        f"ref={ref}\ngot={got}")
+    eng.release_devices()
+    assert alloc.free_devices == alloc.total_devices, "submesh leaked"
+    print(f"PASS parity {arch} submesh={shape}")
+
+
+def check_cross_tp_migration(arch: str, src_shape=(1, 2), dst_shape=(1, 4)):
+    """Start decoding on one TP degree, live-migrate mid-flight to another
+    (and to an unsharded engine); tokens must match an uninterrupted run."""
+    cfg, params = _setup(arch)
+    prompt = _prompts(cfg, n=1, length=10)[0]
+    ref = _drain(Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ),
+                 [prompt])[0]
+
+    for dst_kind in ("sharded", "plain"):
+        alloc = SubmeshAllocator()
+        src = ShardedEngine(cfg, params, alloc.alloc(src_shape),
+                            allocator=alloc, n_slots=1, max_seq_len=MAX_SEQ)
+        src.submit(Request(rid=0, prompt=list(prompt),
+                           max_new_tokens=NEW_TOKENS))
+        for _ in range(3):                     # prefill + a few decode steps
+            src.step()
+        assert src.active, "request finished before migration point"
+        (slot,) = src.active
+        head = list(src.active[slot].generated)
+        export = src.export_slot(slot)
+        src.release_devices()
+        if dst_kind == "sharded":
+            dst = ShardedEngine(cfg, params, alloc.alloc(dst_shape),
+                                allocator=alloc, n_slots=1,
+                                max_seq_len=MAX_SEQ)
+        else:
+            dst = Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ)
+        assert dst.install_active(export), "install_active refused the slot"
+        done = dst.run_until_drained()
+        # the installed RequestState keeps its pre-migration tokens, so the
+        # finished record holds the FULL sequence
+        full = list(done[0].generated)
+        assert full[:len(head)] == head and full == ref, (
+            f"{arch} migration {src_shape}->{dst_kind}: tokens diverge\n"
+            f"ref={ref}\ngot={full}")
+        dst.release_devices()
+        print(f"PASS migration {arch} {src_shape}->"
+              f"{dst_shape if dst_kind == 'sharded' else 'unsharded'}")
+
+
+def check_pool_failover(arch: str) -> None:
+    """A pool with mixed-TP replicas: killing the tp=2 replica frees its
+    submesh and salvages the in-flight request onto the tp=1 survivor."""
+    cfg, params = _setup(arch)
+    alloc = SubmeshAllocator()
+    model = "m"
+
+    def factory(group: ReplicaGroup) -> Engine:
+        from repro.serving.sharded import engine_for_group
+        return engine_for_group(cfg, params, group, alloc, n_slots=2,
+                                max_seq_len=MAX_SEQ)
+
+    pool = EnginePool(factory, max_replicas_per_group=1)
+    g_tp2 = ReplicaGroup(model, "TPU-v5e", 2, 2, 1)
+    g_tp1 = ReplicaGroup(model, "TPU-v5e", 1, 2, 1)
+    pool.reconfigure(Plan((g_tp2, g_tp1)))
+    (victim,) = pool._replicas[g_tp2]
+    assert isinstance(victim, ShardedEngine), "tp=2 group should shard"
+    free_before = alloc.free_devices
+
+    prompt = _prompts(cfg, n=1, length=10)[0]
+    ref = _drain(Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ),
+                 [prompt])[0]
+    victim.submit(Request(rid=0, prompt=list(prompt),
+                          max_new_tokens=NEW_TOKENS))
+    for _ in range(3):
+        victim.step()
+    head = list(victim.active[min(victim.active)].generated)
+    report = pool.fail(victim, reason="injected")
+    assert report.salvaged == 1, f"expected salvage, got {report}"
+    assert alloc.free_devices == free_before + 2, \
+        "dead replica's submesh was not freed"
+    done = pool.run_until_drained()
+    full = list(done[-1].generated)   # salvaged state keeps its head tokens
+    assert full[:len(head)] == head and full == ref, (
+        f"failover tokens diverge\nref={ref}\ngot={full}")
+    print(f"PASS pool failover {arch} (tp=2 death -> tp=1 salvage)")
+
+
+def main() -> int:
+    n = len(jax.devices())
+    assert n >= 8, f"need 8 forced host devices, got {n}"
+    check_parity("qwen2-1.5b", (1, 2))
+    check_parity("qwen2-1.5b", (2, 2))          # TP×DP replica
+    check_parity("mixtral-8x7b", (1, 2))        # expert parallel
+    check_cross_tp_migration("qwen2-1.5b")
+    check_pool_failover("qwen2-1.5b")
+    print("sharded_check: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

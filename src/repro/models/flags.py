@@ -5,6 +5,7 @@ are flipped by benchmarks and the launcher via ``set_flag``.
 """
 from __future__ import annotations
 
+import contextlib
 import os
 
 _FLAGS = {
@@ -23,6 +24,10 @@ _FLAGS = {
     # activation sharding constraints, set by the launcher per cell:
     # None or {"batch": axis-entry, "batch_size": int, "seq": entry, "seq_size": int}
     "act_shard": None,
+    # expert-parallel MoE routing, set by sharded engines at trace time:
+    # None or {"mesh": jax.sharding.Mesh, "axis": str} — when set, the MoE
+    # FFN runs under shard_map with the expert axis sharded on `axis`
+    "ep_shard": None,
 }
 
 
@@ -34,3 +39,20 @@ def set_flag(name: str, value) -> None:
     if name not in _FLAGS:
         raise KeyError(name)
     _FLAGS[name] = value
+
+
+@contextlib.contextmanager
+def scoped(**kw):
+    """Temporarily override flags for the duration of a ``with`` block.
+
+    Flags are read at jit TRACE time, so a sharded engine wraps each jitted
+    call in ``scoped(...)`` — the first (tracing) invocation then bakes the
+    engine's own mesh/sharding switches into the compiled executable without
+    leaking them into other engines sharing the process."""
+    saved = {k: _FLAGS[k] for k in kw}
+    for k, v in kw.items():
+        set_flag(k, v)
+    try:
+        yield
+    finally:
+        _FLAGS.update(saved)

@@ -467,19 +467,27 @@ def init_moe(key, cfg: ModelConfig) -> Params:
     }
 
 
+def moe_gates(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Dense router gates (B,S,E): renormalised top-k probs scattered back
+    into the full expert axis, zeros elsewhere.  Shared by the dense-mix
+    baseline and the expert-parallel shard_map path — gating is computed
+    replicated in both, so sharded and unsharded runs see identical gates."""
+    B, S, _ = x.shape
+    logits = x @ p["router"].astype(x.dtype)                       # (B,S,E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    return jnp.zeros_like(probs).at[
+        jnp.arange(B)[:, None, None], jnp.arange(S)[None, :, None], top_i].set(top_p)
+
+
 def moe_dense_mix(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     """Baseline (paper-faithful naive) MoE: compute ALL experts, weighted-sum.
 
     Simple/robust under pjit; FLOPs = full-expert (the §Perf hillclimb replaces
     this with capacity-based dispatch, see moe_dispatch below).
     """
-    B, S, d = x.shape
-    logits = x @ p["router"].astype(x.dtype)                       # (B,S,E)
-    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
-    top_p, top_i = jax.lax.top_k(probs, cfg.top_k)
-    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
-    gate_full = jnp.zeros_like(probs).at[
-        jnp.arange(B)[:, None, None], jnp.arange(S)[None, :, None], top_i].set(top_p)
+    gate_full = moe_gates(p, cfg, x)
     g = jax.nn.silu(jnp.einsum("bsd,edf->bsef", x, p["w_gate"].astype(x.dtype)))
     u = jnp.einsum("bsd,edf->bsef", x, p["w_up"].astype(x.dtype))
     y = jnp.einsum("bsef,efd->bsed", g * u, p["w_down"].astype(x.dtype))

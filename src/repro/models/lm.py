@@ -67,6 +67,12 @@ def _init_decoder_layer(key, cfg: ModelConfig, cross: bool = False) -> Params:
 
 def _ffn_fwd(p: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     if cfg.family == "moe":
+        ep = flags.get_flag("ep_shard")
+        if ep is not None:
+            # expert-parallel shard_map path (trace-time flag set by sharded
+            # engines): dense-mix semantics, token-identical to the baseline
+            from repro.distributed.expert_parallel import ep_moe_mix
+            return ep_moe_mix(p, cfg, x, ep["mesh"], ep.get("axis", "model"))
         impl = flags.get_flag("moe_impl")
         return (moe_dispatch if impl == "dispatch" else moe_dense_mix)(p, cfg, x)
     return swiglu(p, x)

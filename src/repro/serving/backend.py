@@ -35,6 +35,7 @@ from repro.core.simulator import Simulator
 from repro.models import lm
 from repro.serving.engine import Engine, Request
 from repro.serving.pool import EnginePool, PoolDiff
+from repro.serving.sharded import SubmeshAllocator, engine_for_group
 
 
 def _percentile(sorted_vals: Sequence[float], q: float) -> float:
@@ -228,19 +229,27 @@ class JaxBackend:
     # applied once per serve_interval, keyed on the interval index so the
     # same injector seed replays the same faults at the same points
     fault_injector: Optional[object] = None
+    # mesh-sharded replicas: when the process has >1 device, groups with
+    # tp*dp > 1 run as ShardedEngines on per-replica submeshes carved by
+    # the allocator (single-device hosts degrade to plain engines)
+    shard_replicas: bool = True
     pool: EnginePool = field(init=False)
+    allocator: Optional[SubmeshAllocator] = field(init=False, default=None)
     _rid: int = 0
     _interval_no: int = 0
     _shed_seen: int = 0
 
     def __post_init__(self):
+        if self.shard_replicas and len(jax.devices()) > 1:
+            self.allocator = SubmeshAllocator()
         self.pool = EnginePool(self._make_engine,
                                max_replicas_per_group=self.max_replicas_per_group)
 
     def _make_engine(self, group: ReplicaGroup) -> Engine:
-        return Engine(self.cfg, self.params,
-                      n_slots=max(1, min(group.batch, self.slots_cap)),
-                      max_seq_len=self.max_seq_len)
+        return engine_for_group(
+            self.cfg, self.params, group, self.allocator,
+            n_slots=max(1, min(group.batch, self.slots_cap)),
+            max_seq_len=self.max_seq_len)
 
     # ------------------------------------------------------------------ #
     def set_request_policy(self, rp: Optional[RequestPolicy]) -> None:

@@ -438,6 +438,19 @@ class Engine(RequestSchedulingMixin):
         return tuple(out) or (1,)
 
     # ------------------------------------------------------------------ #
+    def _adopt_cache(self, cache):
+        """Hook for subclasses to re-commit device placement after a
+        host-side cache mutation (slot install).  Identity here; the
+        sharded engine re-applies its NamedShardings so the next step hits
+        the already-compiled partitioned program."""
+        return cache
+
+    def release_devices(self) -> None:
+        """Return any exclusively-held devices when this replica retires.
+        The single-device engine owns nothing exclusively; the sharded
+        engine hands its submesh back to the allocator."""
+
+    # ------------------------------------------------------------------ #
     def max_prompt_len(self, max_new_tokens: int = 1) -> int:
         """Longest prompt that still fits the cache AND leaves decode room
         for ``max_new_tokens`` before step()'s position guard trips: prefill
@@ -678,7 +691,7 @@ class Engine(RequestSchedulingMixin):
                                     export.cache, export.position)
         except lm.SlotMigrationError:
             return False
-        self.cache = cache
+        self.cache = self._adopt_cache(cache)
         st = export.state
         st.slot = slot
         self.active[slot] = st
@@ -706,7 +719,7 @@ class Engine(RequestSchedulingMixin):
             for pid in pages:
                 self.page_pool.unref(pid)
             return False
-        self.cache = cache
+        self.cache = self._adopt_cache(cache)
         self._slot_pages[slot] = pages
         self._ptab[slot, :] = 0
         self._ptab[slot, :len(pages)] = pages

@@ -309,6 +309,7 @@ class EnginePool:
                 self._retired_dispatches += eng.dispatches
                 self._absorbed.pop(id(eng), None)   # engine retires; its id
                 self._quarantined.discard(id(eng))  # may be reused by Python
+                eng.release_devices()    # sharded replica: free its submesh
             del self._replicas[g]
 
         if not build_first:
@@ -461,7 +462,8 @@ class EnginePool:
                 shed += 1
 
         leaked = eng.release_all_pages()
-        self._retired_dispatches += eng.dispatches
+        eng.release_devices()            # a kill frees the dead replica's
+        self._retired_dispatches += eng.dispatches   # submesh for re-carving
         self._absorbed.pop(id(eng), None)
         self._quarantined.discard(id(eng))
         self.failures += 1

@@ -38,6 +38,7 @@ from repro.core.plan import Ctx, Plan, ReplicaGroup, Workload
 from repro.core.policy import (KVCachePolicy, Policy, ReconfigPolicy,
                                RequestPolicy, seed_policies)
 from repro.core.simulator import PENALTY, Simulator
+from repro.distributed import hlo_analysis
 from repro.serving import kvcache
 from repro.serving.backend import ReconfigReport, measured_interval_metrics
 from repro.serving.engine import (DrainStallError, Request,
@@ -338,6 +339,10 @@ class ShadowEngine(RequestSchedulingMixin):
             self.step_ema_s = 0.7 * self.step_ema_s + 0.3 * dt
         self.health_samples += 1
 
+    def release_devices(self) -> None:
+        """Shadow twin of Engine.release_devices: shadow replicas hold no
+        physical submesh, so teardown/failure device reclaim is a no-op."""
+
     def release_all_pages(self) -> int:
         """Drop the virtual prefix cache's page references (the shadow twin
         of Engine.release_all_pages — a dead shadow replica must not strand
@@ -415,7 +420,7 @@ class ShadowBackend:
 
     # ------------------------------------------------------------------ #
     def _costs_for(self, g: ReplicaGroup) -> ShadowCosts:
-        key = (g.model, g.gpu_type, g.tp)
+        key = (g.model, g.gpu_type, g.tp, g.dp)
         hit = self._costs.get(key)
         if hit is not None:
             return hit
@@ -426,9 +431,18 @@ class ShadowBackend:
                                 1e-3 * self.time_scale,
                                 5e-4 * self.time_scale)
         else:
+            # honest TP: a degree the sharding layer would fully fall back
+            # on (heads AND experts indivisible) is costed at tp=1 — the
+            # replica burns tp× devices without the speedup, which is
+            # exactly the trade the shadow rung must surface, not hide.
+            eff = hlo_analysis.effective_tp(z, g.tp)
             ref = self.REF_PREFILL
-            k_p = self.sim.prefill_time(z, gpu, g.tp, 1, ref) / ref
-            k_d = self.sim.decode_time(z, gpu, g.tp, 1, ref, 1)
+            k_p = self.sim.prefill_time(z, gpu, eff, 1, ref) / ref
+            k_d = self.sim.decode_time(z, gpu, eff, 1, ref, 1)
+            # intra-replica DP shards the step batch dp-ways (per-step
+            # collective cost is already inside prefill/decode_time Eq. 6)
+            k_p /= g.dp
+            k_d /= g.dp
             costs = ShadowCosts(prefill_per_token_s=k_p * self.time_scale,
                                 decode_step_s=k_d * self.time_scale,
                                 migrate_slot_s=0.5 * k_d * self.time_scale)
@@ -540,6 +554,16 @@ class ShadowBackend:
         self.stats.reset()
         diff = self.pool.reconfigure(plan)
         handoff = self.stats.drain_s + self.stats.migrate_s
+        # shape-aware rebuild: each newly built group pays its per-device
+        # weight-shard pull (weight_bytes / eff_tp over PCIe) on the virtual
+        # clock, so a TP-widening plan is cheaper to stand up than a DP one
+        # of equal device count and the canary guard sees that difference
+        for g in diff.built:
+            z = self.sim.models.get(g.model)
+            gpu = self.sim.hardware.get(g.gpu_type)
+            if z is not None and gpu is not None:
+                handoff += (hlo_analysis.rebuild_cost_s(z, gpu, g.tp)
+                            * self.time_scale)
         self.vnow += handoff
         return ReconfigReport(wall_s=handoff, simulated_s=sim_cost,
                               built=diff.built, reused=diff.reused,

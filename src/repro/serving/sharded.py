@@ -1,0 +1,208 @@
+"""Mesh-sharded replica execution: TP×DP engines on carved submeshes.
+
+Each :class:`repro.core.plan.ReplicaGroup` with ``tp * dp > 1`` materialises
+as a :class:`ShardedEngine` running on a private ``(dp, tp)`` submesh carved
+out of the process's device set by a :class:`SubmeshAllocator` (the dynamic
+counterpart of :func:`repro.launch.mesh.carve_submeshes` — same deterministic
+sorted-device-id order, but replicas come and go, so carving is an
+alloc/release protocol instead of a one-shot partition).
+
+Execution strategy (how the sharding actually happens):
+
+  * **Dense TP** — parameters and KV caches are committed onto the submesh
+    with :mod:`repro.distributed.sharding`'s Megatron rules via
+    ``jax.device_put``; the engine's ordinary ``jax.jit`` step closures then
+    compile to partitioned SPMD programs (GSPMD propagates the committed
+    input shardings — no explicit ``in_shardings`` needed, and host-side
+    NumPy step inputs stay replicated).  ``fsdp_axis`` is disabled: a
+    serving replica replicates weights across its data axis rather than
+    paying per-step ZeRO-3 all-gathers.
+  * **Expert parallelism** (Mixtral-family) — GSPMD has no partition rule
+    for ``pallas_call``, so the MoE FFN routes through
+    :func:`repro.distributed.expert_parallel.ep_moe_mix`: an explicit
+    ``shard_map`` over the expert axis running the grouped
+    ``kernels/moe_gmm`` matmul per shard.  The engine requests it by setting
+    the trace-time ``ep_shard`` flag around every jitted call (the flag is
+    read inside ``lm._ffn_fwd`` when the closure first traces).
+  * **DP** — the slot batch is sharded across the submesh's ``data`` axis
+    when divisible (``sharding._batch_entry`` falls back to replication
+    otherwise), so one replica's decode step fans out over dp weight copies.
+
+Migration interop: slot export/install rides the existing host-side NumPy
+wire formats (:func:`repro.models.lm.extract_slot` and friends), which are
+TP-agnostic — a slot exported from a tp=2 replica installs into a tp=1 or
+tp=4 survivor unchanged.  :meth:`ShardedEngine._adopt_cache` re-commits the
+cache sharding after such host-side installs so the next step hits the
+compiled partitioned program instead of recompiling for an uncommitted
+layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import ReplicaGroup
+from repro.distributed import sharding
+from repro.models import flags, lm
+from repro.serving.engine import Engine
+
+
+class SubmeshOversubscribed(RuntimeError):
+    """An allocation asked for more devices than the allocator has free."""
+
+
+class SubmeshAllocator:
+    """Carves per-replica ``(dp, tp)`` submeshes from a fixed device set.
+
+    Deterministic: devices are handed out in ascending ``device.id`` order
+    and returned to the free list in sorted order, so the same alloc/release
+    sequence always yields the same physical placement — replica rebuilds
+    are reproducible and the shadow rung's cost attribution stays stable.
+    """
+
+    def __init__(self, devices: Optional[Sequence] = None,
+                 axes: Tuple[str, ...] = ("data", "model")):
+        if devices is None:
+            devices = jax.devices()
+        self.axes = tuple(axes)
+        self._free: List = sorted(devices, key=lambda d: d.id)
+        # id(mesh) -> (mesh, devices): holding the mesh keeps its id stable
+        self._owned: Dict[int, Tuple[Mesh, List]] = {}
+
+    @property
+    def free_devices(self) -> int:
+        return len(self._free)
+
+    @property
+    def total_devices(self) -> int:
+        return len(self._free) + sum(len(d) for _, d in self._owned.values())
+
+    def can_alloc(self, shape: Sequence[int]) -> bool:
+        return int(np.prod(tuple(shape))) <= len(self._free)
+
+    def alloc(self, shape: Sequence[int]) -> Mesh:
+        shape = tuple(int(s) for s in shape)
+        n = int(np.prod(shape))
+        if n > len(self._free):
+            raise SubmeshOversubscribed(
+                f"submesh {shape} needs {n} devices but only "
+                f"{len(self._free)} of {self.total_devices} are free")
+        take, self._free = self._free[:n], self._free[n:]
+        grid = np.array(take, dtype=object).reshape(shape)
+        mesh = Mesh(grid, self.axes[:len(shape)])
+        self._owned[id(mesh)] = (mesh, take)
+        return mesh
+
+    def try_alloc(self, shape: Sequence[int]) -> Optional[Mesh]:
+        return self.alloc(shape) if self.can_alloc(shape) else None
+
+    def release(self, mesh: Mesh) -> None:
+        """Return a submesh's devices; releasing twice (or a foreign mesh)
+        is a no-op so teardown paths need no is-mine bookkeeping."""
+        entry = self._owned.pop(id(mesh), None)
+        if entry is None:
+            return
+        self._free = sorted(self._free + entry[1], key=lambda d: d.id)
+
+
+class ShardedEngine(Engine):
+    """An :class:`Engine` whose params/cache live sharded on a submesh.
+
+    Behaviourally identical to the base engine (same slots, paging,
+    migration, scheduling hooks) — only the placement of device state and
+    the compiled step programs differ.  Token outputs are identical to a
+    single-device engine up to floating-point reduction order; the sharded
+    parity tests pin float32 so greedy argmax matches exactly.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, mesh: Mesh,
+                 allocator: Optional[SubmeshAllocator] = None, **kw):
+        self.mesh = mesh
+        self.allocator = allocator
+        pol = sharding.make_policy(mesh, cfg)
+        # serving replicas replicate weights across the data axis: ZeRO-3
+        # gathers per decode step would swamp the tiny per-token compute
+        pol = dataclasses.replace(pol, fsdp_axis=None)
+        self.sharding_policy = pol
+        # the decision records every divisibility fallback so downstream
+        # costing (hlo_analysis / shadow) prices replicated dims honestly
+        self.decision = sharding.sharding_decision(cfg, pol, params)
+        self._ep_flag = ({"mesh": mesh, "axis": pol.tp_axis}
+                         if pol.ep else None)
+        # pallas_call has no GSPMD partition rule: the fused paged-decode
+        # kernel cannot run inside a partitioned jit (the EP moe_gmm path
+        # wraps its kernel in an explicit shard_map instead)
+        kw.setdefault("use_paged_kernel", False)
+        super().__init__(cfg, params, **kw)
+        self.params = jax.device_put(
+            params, sharding._ns(mesh, self.decision.param_specs))
+        spec_fn = (sharding.paged_cache_pspecs if self.paged
+                   else sharding.cache_pspecs)
+        self._cache_ns = sharding._ns(mesh, spec_fn(cfg, pol, self.cache))
+        self.cache = jax.device_put(self.cache, self._cache_ns)
+        if self._ep_flag is not None:
+            if self.paged:
+                self._paged_exec = self._with_ep(self._paged_exec)
+            else:
+                self._decode = self._with_ep(self._decode)
+                self._prefill = self._with_ep(self._prefill)
+
+    # -------------------------------------------------------------- #
+    @property
+    def tp(self) -> int:
+        return self.mesh.shape[self.sharding_policy.tp_axis]
+
+    @property
+    def dp(self) -> int:
+        return self.mesh.shape.get("data", 1)
+
+    def _with_ep(self, fn):
+        """Every call enters the ``ep_shard`` trace-time flag scope: the
+        flag only matters when the jitted closure first traces, but the
+        context entry is cheap and keying on it keeps retraces correct."""
+        flag = self._ep_flag
+
+        def run(*args):
+            with flags.scoped(ep_shard=flag):
+                return fn(*args)
+        return run
+
+    def _adopt_cache(self, cache):
+        """Re-commit the sharded layout after a host-side slot install —
+        ``lm.install_slot``/``install_paged_slot`` scatter NumPy state into
+        the cache eagerly, which can leave leaves with a propagated (or
+        uncommitted) layout; without this the next decode step would
+        recompile against the wrong input sharding."""
+        return jax.device_put(cache, self._cache_ns)
+
+    def release_devices(self) -> None:
+        """Return this replica's submesh to the allocator (idempotent).
+        Called by the pool when the replica retires — planned teardown in
+        ``reconfigure`` or unplanned death in ``fail`` — so the freed
+        devices are immediately carveable for the next plan's groups."""
+        if self.allocator is not None:
+            self.allocator.release(self.mesh)
+            self.allocator = None
+
+
+def engine_for_group(cfg: ModelConfig, params, group: ReplicaGroup,
+                     allocator: Optional[SubmeshAllocator], **kw) -> Engine:
+    """Build the right engine for one replica of ``group``.
+
+    A ``tp*dp > 1`` group gets a :class:`ShardedEngine` on a freshly carved
+    ``(dp, tp)`` submesh when the allocator has the devices; otherwise —
+    single-device group, no allocator (CPU test host), or not enough free
+    devices (a plan the guard chain admitted but hardware shrank under) —
+    it degrades to the plain single-device :class:`Engine`, which is
+    token-identical, just slower.
+    """
+    if allocator is not None and group.tp * group.dp > 1:
+        sub = allocator.try_alloc(group.submesh_shape)
+        if sub is not None:
+            return ShardedEngine(cfg, params, sub, allocator=allocator, **kw)
+    return Engine(cfg, params, **kw)

@@ -63,3 +63,36 @@ def test_roofline_fraction_never_exceeds_useful_ratio_bound():
     # fraction = ideal/bound <= 1 whenever model_flops <= hlo_flops
     assert t.roofline_fraction <= 1.0 + 1e-9
     assert 0.0 < t.useful_flops_ratio <= 1.0
+
+
+def test_analytic_tp_fallback_and_shape_costs():
+    """The shard_map-era analytic helpers: honest effective TP, Eq. 6
+    collective volume and shape-aware rebuild — the terms the shadow rung
+    and the TP×DP roofline table price placements with."""
+    from types import SimpleNamespace
+
+    from repro.distributed import hlo_analysis as ha
+
+    dense = SimpleNamespace(n_heads=12, n_experts=0, n_layers=4, d_model=64,
+                            dtype_bytes=2, weight_bytes=4e9)
+    assert ha.tp_fallback_fraction(dense, 1) == 0.0
+    assert ha.tp_fallback_fraction(dense, 4) == 0.0
+    assert ha.effective_tp(dense, 4) == 4
+    assert ha.tp_fallback_fraction(dense, 8) == 1.0   # 12 heads % 8
+    assert ha.effective_tp(dense, 8) == 1
+    # MoE: experts shard even when heads would not (the EP path)
+    moe = SimpleNamespace(n_heads=12, n_experts=8, n_layers=4, d_model=64,
+                          dtype_bytes=2, weight_bytes=4e9)
+    assert ha.effective_tp(moe, 8) == 8
+
+    g = SimpleNamespace(intra_bw=100e9, inter_bw=25e9, devices_per_node=8,
+                        pcie_bw=16e9)
+    # full fallback: nothing is actually sharded → no collectives, and the
+    # rebuild pulls the FULL weights (not weight/8)
+    assert ha.step_collective_s(dense, g, 8, batch=16) == 0.0
+    assert ha.rebuild_cost_s(dense, g, 8) == dense.weight_bytes / g.pcie_bw
+    # clean shard: 2 ring all-reduces/layer over the residual stream
+    vol = ha.tp_collective_bytes_per_token(dense, 4)
+    assert vol == 2 * 2 * (4 - 1) / 4 * 4 * 64 * 2
+    assert ha.step_collective_s(dense, g, 4, batch=16) == vol * 16 / g.intra_bw
+    assert ha.rebuild_cost_s(dense, g, 4) == dense.weight_bytes / 4 / g.pcie_bw

@@ -92,6 +92,46 @@ def test_minimal_migration_replaces_lost_devices():
     assert {g.model for g in p1.groups} == {"qwen2.5-7b"}
 
 
+def test_tp_shardable_and_candidates_filter():
+    from repro.core.schedulers import tp_candidates, tp_shardable
+    z = MODELS["qwen2.5-1.5b"]                 # 12 q-heads, no experts
+    assert tp_shardable(z, 1) and tp_shardable(z, 4)
+    assert not tp_shardable(z, 8)              # 12 % 8 → physically unbuildable
+    cluster = ClusterState((("H100-80G", 16),))
+    ctx = make_ctx([Workload("qwen2.5-1.5b", 8, 128, 128)], cluster)
+    cands = tp_candidates(z, "H100-80G", ctx)
+    assert 4 in cands and 1 in cands and 8 not in cands
+
+
+def test_apply_replica_dp_widens_when_devices_allow():
+    from repro.core.plan import Plan, ReplicaGroup
+    from repro.core.schedulers import apply_replica_dp
+    ws = [Workload("qwen2.5-7b", 32, 256, 512)]
+    cluster = ClusterState((("H100-80G", 8),))
+    base = Plan((ReplicaGroup("qwen2.5-7b", "H100-80G", 2, 8, 1),))
+    wide = apply_replica_dp(base, make_ctx(ws, cluster, plan=base), 2)
+    g = wide.groups[0]
+    assert (g.tp, g.dp, g.devices, g.submesh_shape) == (2, 2, 4, (2, 2))
+    feas, why = SIM.plan_feasible(wide, cluster, ws)
+    assert feas, why
+    # no spare devices → keeps dp=1 (auto-fallback, never goes infeasible)
+    tight = ClusterState((("H100-80G", 2),))
+    assert apply_replica_dp(base, make_ctx(ws, tight, plan=base), 2) == base
+    # dp must divide the per-replica batch
+    odd = Plan((ReplicaGroup("qwen2.5-7b", "H100-80G", 2, 7, 1),))
+    assert apply_replica_dp(odd, make_ctx(ws, cluster, plan=odd), 2) == odd
+
+
+def test_plan_feasible_rejects_unbuildable_tp():
+    # the shared guard both eval rungs run: 12 heads cannot shard 8-ways
+    from repro.core.plan import Plan, ReplicaGroup
+    ws = [Workload("qwen2.5-1.5b", 8, 128, 128)]
+    cluster = ClusterState((("H100-80G", 16),))
+    bad = Plan((ReplicaGroup("qwen2.5-1.5b", "H100-80G", 8, 8, 1),))
+    feas, why = SIM.plan_feasible(bad, cluster, ws)
+    assert not feas and "tp" in why.lower()
+
+
 def test_agentic_bnb_no_worse_than_greedy():
     import random
 

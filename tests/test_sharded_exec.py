@@ -1,0 +1,27 @@
+"""End-to-end sharded-execution parity, in a subprocess.
+
+``repro.launch.sharded_check`` forces 8 host devices via XLA_FLAGS *before*
+importing jax, which cannot be done inside an already-initialised pytest
+process — so the whole ladder (dense TP parity, TP×DP, expert-parallel
+mixtral, cross-TP live migration, pool failover with submesh reclaim) runs
+as one subprocess and this test asserts its verdict."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def test_sharded_check_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    # the module sets its own XLA_FLAGS/JAX_PLATFORMS at import; clear any
+    # conflicting outer setting so the forced 8-device CPU config wins
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.sharded_check"],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=900)
+    tail = (proc.stdout + proc.stderr)[-4000:]
+    assert proc.returncode == 0, tail
+    assert "sharded_check: all checks passed" in proc.stdout, tail

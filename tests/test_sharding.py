@@ -71,6 +71,114 @@ def test_activation_flags_seq_sharding():
     assert f3["batch"] == ("data", "model") and f3["seq"] is None
 
 
+# --------------------------------------------------------------------------- #
+# decode-2D-TP / fallback records / paged pool specs / submesh allocator
+# --------------------------------------------------------------------------- #
+TP4 = StubMesh({"data": 2, "model": 4})
+
+
+def _sds(*shape):
+    import jax
+    import jax.numpy as jnp
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_decode_2d_tp_replicate_batch():
+    pol = sh.ShardingPolicy(TP4, mode="tp", batch_axes=("data",),
+                            replicate_batch=True)
+    # hidden-state batch replicates (the data axis is freed for weight rows)
+    assert sh._batch_entry(pol, 8) is None
+    f = sh.activation_shard_flags(pol, B=8, S=1)
+    assert f["batch"] is None and f["batch_size"] == 1
+    # ...but the KV cache KEEPS batch sharding: attention stays shard-local
+    # over batch slices while hidden states replicate
+    cache = {"k": _sds(2, 8, 32, 2, 16)}
+    spec = sh.cache_pspecs(get_config("qwen2-1.5b"), pol, cache)
+    assert spec["k"] == P(None, "data", "model", None, None)
+
+
+def test_paged_cache_pspecs_shards_heads_not_pages():
+    import warnings
+    cfg = get_config("qwen2-1.5b")
+    pol = sh.ShardingPolicy(StubMesh({"data": 1, "model": 2}), mode="tp",
+                            batch_axes=("data",))
+    cache = {"kp": _sds(2, 16, 64, 4, 16), "ckvp": _sds(2, 16, 64, 32)}
+    specs = sh.paged_cache_pspecs(cfg, pol, cache)
+    # page axis must stay addressable from every shard → heads carry the
+    # partition; MLA latent pool has no head axis and replicates
+    assert specs["kp"] == P(None, None, None, "model", None)
+    assert specs["ckvp"] == P(None, None, None, None)
+    # KV head count not divisible by tp → honest fallback to replication
+    pol4 = sh.ShardingPolicy(TP4, mode="tp", batch_axes=("data",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", sh.ShardingFallback)
+        bad = sh.paged_cache_pspecs(cfg, pol4, {"kp": _sds(2, 16, 64, 2, 16)})
+    assert bad["kp"] == P(None, None, None, None, None)
+
+
+def test_sharding_decision_records_fallbacks_and_warns_once():
+    import warnings
+    cfg = get_config("qwen2-1.5b")
+    pol = sh.ShardingPolicy(TP4, mode="tp", batch_axes=("data",))
+    params = {"unitA": {"attn": {
+        "wq": _sds(64, 6),      # 6 % 4 → tp assignment dropped
+        "wo": _sds(8, 64)}}}    # 8 % 4, 64 % 2 → kept
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        d = sh.sharding_decision(cfg, pol, params)
+    assert [(f.path, f.axis_index, f.dim, f.axis) for f in d.fallbacks] == \
+        [("unitA.attn.wq", 1, 6, "model")]
+    assert 0.0 < d.tp_fallback_fraction < 1.0
+    assert d.effective_tp == 4          # partial fallback keeps the degree
+    assert len([x for x in w
+                if issubclass(x.category, sh.ShardingFallback)]) == 1
+    # identical decision re-records the fallback but does not re-warn
+    with warnings.catch_warnings(record=True) as w2:
+        warnings.simplefilter("always")
+        d2 = sh.sharding_decision(cfg, pol, params)
+    assert not [x for x in w2 if issubclass(x.category, sh.ShardingFallback)]
+    assert len(d2.fallbacks) == 1
+
+
+def test_full_tp_fallback_reports_effective_tp_one():
+    import warnings
+    cfg = get_config("qwen2-1.5b")
+    pol = sh.ShardingPolicy(TP4, mode="tp", batch_axes=("data",))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", sh.ShardingFallback)
+        d = sh.sharding_decision(cfg, pol,
+                                 {"unitB": {"attn": {"wq": _sds(6, 6)}}})
+    assert d.tp_fallback_fraction == 1.0
+    assert d.effective_tp == 1          # every tp dim replicated
+
+
+def test_make_policy_tp_incompatible_and_ep_defaults():
+    # 12 q-heads % 16 → automatic fsdp fallback instead of a broken TP plan
+    pol = sh.make_policy(StubMesh({"data": 1, "model": 16}),
+                         get_config("qwen2-1.5b"))
+    assert pol.mode == "fsdp" and not pol.ep
+    # mixtral: 8 experts % 2 == 0 → expert parallelism on by default
+    pol2 = sh.make_policy(StubMesh({"data": 1, "model": 2}),
+                          get_config("mixtral-8x7b"))
+    assert pol2.mode == "tp" and pol2.ep
+
+
+def test_submesh_allocator_alloc_release_oversubscribe():
+    from repro.serving.sharded import SubmeshAllocator, SubmeshOversubscribed
+    alloc = SubmeshAllocator()
+    n = alloc.total_devices
+    m = alloc.alloc((1, n))
+    assert m.shape["model"] == n and m.shape["data"] == 1
+    assert alloc.free_devices == 0
+    assert alloc.try_alloc((1, 1)) is None
+    with pytest.raises(SubmeshOversubscribed):
+        alloc.alloc((1, 1))
+    alloc.release(m)
+    assert alloc.free_devices == n
+    alloc.release(m)                     # idempotent
+    assert alloc.free_devices == n
+
+
 def test_dryrun_artifacts_exist_for_all_cells():
     """The committed dry-run artifacts must cover the full 40×2 matrix."""
     import json
