@@ -9,6 +9,12 @@ reconfiguration wall-clock and post-reconfig TTFT.
 the artifact lands in ``benchmarks/artifacts/elastic_cluster.json`` and the
 acceptance gate is migrate ≤ drain measured reconfig wall-clock on the
 ``elastic-volatile`` trace.
+
+When ≥ 8 host devices are available (the multidevice CI job), the run also
+replays ``fragmented_cluster_traces`` through the measured pp-vs-tp
+capacity comparison (benchmarks/pipeline_fragmentation.py) and asserts a
+pp-capable plan serves strictly more of the fragmented windows than
+tp-only; on smaller hosts that section emits an explicit skip row.
 """
 from __future__ import annotations
 
@@ -143,6 +149,13 @@ def run(smoke: bool = False) -> list:
         rows.append((f"table3/{tname}/measured/migrate_vs_drain", 0.0,
                      f"wall_ratio={ratio:.2f}x (<1 = migration wins)"))
     payload["measured_reconfig"] = measured
+
+    # ---- fragmented free set: pp-capable vs tp-only served tokens ----
+    from benchmarks.pipeline_fragmentation import fragmented_capacity
+    frag_rows, frag_payload = fragmented_capacity(smoke)
+    rows.extend(frag_rows)
+    payload["fragmented_capacity"] = frag_payload
+
     vol = measured["elastic-volatile"]
     assert (vol["migrate"]["reconfig_wall_s"]
             <= vol["drain"]["reconfig_wall_s"]), (

@@ -1,0 +1,164 @@
+"""Pipeline parallelism vs fragmentation — measured capacity benchmark.
+
+Replays ``fragmented_cluster_traces``: elastic churn leaves an 8-device
+host's free set as non-contiguous islands (``FRAGMENT_WINDOWS``).  A
+tensor-parallel-only policy needs its whole (1, tp) submesh inside ONE
+island, while a pipelined replica lands each (1, tp) stage submesh on its
+own island — so under a per-device memory budget that forces >= 4 devices
+per replica, tp-only serves only the windows that happen to contain a
+4-island, and the pp-capable policy serves every window.
+
+Both policies run REAL engines (float32 reduced qwen2-1.5b, forced host
+devices) and we count actually-generated tokens; the ``--smoke`` acceptance
+gate asserts the pp-capable plan serves STRICTLY more of the fragmented
+trace than tp-only.  On hosts with < 8 devices the measurement is skipped
+with an explicit row (the multidevice CI job forces 8).
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules:
+    # standalone invocation: force 8 host devices before JAX initialises
+    # (same idiom as repro.launch.sharded_check); when imported by the
+    # benchmark aggregator JAX is already up and we use whatever it has.
+    _FLAG = "--xla_force_host_platform_device_count"
+    if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") + f" {_FLAG}=8").strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses
+
+import jax
+
+from benchmarks.common import Row, emit, save_json
+from repro.configs import get_config
+from repro.core.plan import default_stage_cuts
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.sharded import (PipelinedEngine, ShardedEngine,
+                                   SubmeshAllocator)
+from repro.traces.workload import FRAGMENT_WINDOWS, fragmented_cluster_traces
+
+# Modeled per-device HBM budget as a fraction of FULL model weight bytes:
+# 0.3x means tp=1 (1.0x/device) and tp=2 (0.5x/device) do not fit, while any
+# 4-device split — tp=4, or pp=2 x tp=2 — does (0.25x/device).  This is what
+# makes replica shape a CAPACITY question instead of a latency preference.
+BUDGET_FRAC = 0.3
+N_REQUESTS = 2
+MAX_NEW = 4
+PROMPT_LEN = 8
+
+
+def _fragmented_allocator(window) -> SubmeshAllocator:
+    """Fresh 8-device allocator whose FREE set is exactly `window`'s islands
+    (consecutive-id runs separated by one still-held device)."""
+    alloc = SubmeshAllocator()
+    holds = {i: alloc.alloc((1, 1)) for i in range(8)}
+    start = 0
+    for size in window:
+        for i in range(start, start + size):
+            alloc.release(holds.pop(i))
+        start += size + 1
+    assert sorted(len(f) for f in alloc.fragments()) == sorted(window)
+    return alloc
+
+
+def _drain_tokens(eng, cfg) -> int:
+    for r in range(N_REQUESTS):
+        eng.submit(Request(
+            rid=r,
+            prompt=[1 + (7 * r + 3 * j) % (cfg.vocab_size - 2)
+                    for j in range(PROMPT_LEN)],
+            max_new_tokens=MAX_NEW))
+    done = eng.run_until_drained()
+    served = sum(len(d.generated) for d in done)
+    eng.release_devices()
+    return served
+
+
+def _min_feasible_tp(cfg, budget_frac: float) -> int:
+    for tp in (1, 2, 4, 8):
+        if cfg.n_heads % tp == 0 and 1.0 / tp <= budget_frac:
+            return tp
+    return 0
+
+
+def fragmented_capacity(smoke: bool = False):
+    """(rows, payload): per-window served tokens for tp-only vs pp-capable
+    placement on the fragmented trace, with the smoke acceptance gate."""
+    rows: list = []
+    payload: dict = {"budget_frac": BUDGET_FRAC,
+                     "windows": [list(w) for w in FRAGMENT_WINDOWS]}
+    if len(jax.devices()) < 8:
+        rows.append(("fragmented/skip", 0.0,
+                     f"needs 8 devices, have {len(jax.devices())}"))
+        payload["skipped"] = f"devices={len(jax.devices())}"
+        return rows, payload
+
+    cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(),
+                              dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    trace = fragmented_cluster_traces()["fragmented-islands"]
+    tp_req = _min_feasible_tp(cfg, BUDGET_FRAC)
+    assert tp_req == 4, tp_req
+    stage_tp = 2                    # pp=2 x tp=2: same 4-device footprint
+    cuts = default_stage_cuts(cfg.n_layers, 2)
+
+    tp_total = pp_total = 0
+    per_window = []
+    for obs in trace.observations:
+        window = FRAGMENT_WINDOWS[obs.idx]
+        tp_fits = any(len(f) >= tp_req
+                      for f in _fragmented_allocator(window).fragments())
+        tp_served = pp_served = 0
+        how = "none"
+        if tp_fits:
+            # best-fit keeps a (1, tp_req) submesh inside a single island
+            alloc = _fragmented_allocator(window)
+            tp_served = _drain_tokens(
+                ShardedEngine(cfg, params, alloc.alloc((1, tp_req)),
+                              allocator=alloc, n_slots=N_REQUESTS,
+                              max_seq_len=32), cfg)
+            pp_served = tp_served   # pp-capable policy also prefers pure tp
+            how = f"tp={tp_req}"
+        else:
+            alloc = _fragmented_allocator(window)
+            meshes = alloc.try_alloc_stages(2, (1, stage_tp))
+            if meshes is not None:
+                pp_served = _drain_tokens(
+                    PipelinedEngine(cfg, params, cuts, stage_meshes=meshes,
+                                    allocator=alloc, n_slots=N_REQUESTS,
+                                    max_seq_len=32), cfg)
+                how = f"pp=2xtp={stage_tp}"
+        tp_total += tp_served
+        pp_total += pp_served
+        per_window.append({"window": list(window), "tp_served": tp_served,
+                           "pp_served": pp_served, "pp_choice": how})
+        rows.append((f"fragmented/window{obs.idx}", 0.0,
+                     f"islands={list(window)} tp_only={tp_served} "
+                     f"pp_capable={pp_served} via={how}"))
+
+    payload["per_window"] = per_window
+    payload["tp_only_served"] = tp_total
+    payload["pp_capable_served"] = pp_total
+    rows.append(("fragmented/served_tokens", 0.0,
+                 f"tp_only={tp_total} pp_capable={pp_total} "
+                 f"(+{pp_total - tp_total})"))
+    assert pp_total > tp_total, (
+        "a pp-capable plan must serve STRICTLY more of the fragmented "
+        f"windows than tp-only: pp={pp_total} tp={tp_total}")
+    return rows, payload
+
+
+def run(smoke: bool = False) -> list:
+    rows, payload = fragmented_capacity(smoke)
+    payload["smoke"] = smoke
+    save_json("pipeline_fragmentation", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run(smoke="--smoke" in sys.argv))

@@ -20,6 +20,7 @@ MODULES = [
     ("fig7", "benchmarks.end_to_end"),
     ("appG", "benchmarks.policy_deepdive"),
     ("fidelity", "benchmarks.evolution_fidelity"),
+    ("fragment", "benchmarks.pipeline_fragmentation"),
     ("kernels", "benchmarks.kernels_micro"),
     ("roofline", "benchmarks.roofline"),
     ("engine", "benchmarks.serving_engine"),

@@ -116,6 +116,8 @@ _CATEGORICAL = {
     "trigger_kind": ["always", "threshold", "periodic", "hybrid"],
     "tp_floor_large": [0, 2, 4],
     "replica_dp": [1, 2, 4],
+    "replica_pp": [1, 2, 4],
+    "stage_balance": ["even", "front-light", "rear-light"],
     "intra_node_only": [False, True],
     "heterogeneity_aware": [True, False],
     "weighted_obj": [False, True],

@@ -143,6 +143,46 @@ class ClusterState:
         return [g for g, c in self.gpus if c > 0]
 
 
+def default_stage_cuts(n_layers: int, pp: int,
+                       balance: str = "even") -> Tuple[int, ...]:
+    """Interior layer boundaries for a ``pp``-deep pipeline.
+
+    With ``bounds = (0,) + cuts + (n_layers,)``, stage *i* runs layers
+    ``[bounds[i], bounds[i+1])``.  ``even`` splits near-equally;
+    ``front-light`` gives stage 0 one fewer layer (it already hosts the
+    embedding lookup) and ``rear-light`` lightens the last stage (it hosts
+    the final norm + LM head).  Returns ``()`` when ``pp <= 1`` or the model
+    is shallower than the pipeline.
+    """
+    pp = int(pp)
+    if pp <= 1 or n_layers < pp:
+        return ()
+    bounds = [round(i * n_layers / pp) for i in range(pp + 1)]
+    bounds[0], bounds[pp] = 0, n_layers
+    for i in range(1, pp + 1):           # rounding can collapse boundaries
+        bounds[i] = max(bounds[i], bounds[i - 1] + 1)
+    for i in range(pp, 0, -1):           # ...push back if we overshot the top
+        if bounds[i - 1] >= bounds[i]:
+            bounds[i - 1] = bounds[i] - 1
+    if balance == "front-light" and bounds[1] > 1:
+        bounds[1] -= 1
+    elif balance == "rear-light" and bounds[pp] - bounds[pp - 1] > 1:
+        bounds[pp - 1] += 1
+    return tuple(bounds[1:pp])
+
+
+def valid_stage_cuts(n_layers: int, pp: int, cuts: Tuple[int, ...]) -> bool:
+    """True when ``cuts`` are legal interior boundaries for a ``pp``-deep
+    pipeline over ``n_layers`` layers: len pp-1, strictly increasing, and
+    strictly inside (0, n_layers) so every stage owns >= 1 layer."""
+    if pp <= 1:
+        return tuple(cuts) == ()
+    if len(cuts) != pp - 1:
+        return False
+    b = (0,) + tuple(int(c) for c in cuts) + (n_layers,)
+    return all(b[i] < b[i + 1] for i in range(pp))
+
+
 @dataclass(frozen=True)
 class ReplicaGroup:
     model: str
@@ -154,18 +194,32 @@ class ReplicaGroup:
     # its batch is sharded dp-ways, so one replica owns tp·dp devices.
     # Trailing default keeps every positional ReplicaGroup(...) call working.
     dp: int = 1
+    # pipeline parallelism: pp stages, each on its own (dp, tp) stage submesh,
+    # so one replica owns pp·dp·tp devices.  stage_cuts are the interior layer
+    # boundaries (len pp-1, strictly increasing); () means the default even
+    # split.  Stages tolerate fragmented free sets — each stage submesh can
+    # land on a different free fragment, which is the whole point of pp on
+    # elastic clusters (FlexPipe).
+    pp: int = 1
+    stage_cuts: Tuple[int, ...] = ()
 
     @property
     def devices(self) -> int:
-        return self.tp * self.dp * self.count
+        return self.tp * self.dp * self.pp * self.count
 
     @property
     def capacity(self) -> int:
         return self.batch * self.count
 
     @property
-    def submesh_shape(self) -> Tuple[int, int]:
-        """(data, model) mesh shape of one replica."""
+    def submesh_shape(self) -> Tuple[int, int, int]:
+        """(pipe, data, model) mesh shape of one replica."""
+        return (self.pp, self.dp, self.tp)
+
+    @property
+    def stage_submesh_shape(self) -> Tuple[int, int]:
+        """(data, model) mesh shape of ONE pipeline stage — what the
+        allocator actually carves, pp times per replica."""
         return (self.dp, self.tp)
 
 
@@ -182,11 +236,14 @@ class Plan:
             used[g.gpu_type] = used.get(g.gpu_type, 0) + g.devices
         return used
 
-    def placement(self, model: str) -> Tuple[Tuple[str, int, int, int], ...]:
-        """Hashable (gpu_type, tp, dp, count) tuple per model — reconfig
-        diffing.  dp joins tp so a TP×DP reshape of the same device budget
-        registers as a placement change."""
-        return tuple(sorted((g.gpu_type, g.tp, g.dp, g.count)
+    def placement(self, model: str) -> Tuple[Tuple, ...]:
+        """Hashable (gpu_type, tp, dp, pp, stage_cuts, count) tuple per
+        model — reconfig diffing.  dp/pp/stage_cuts join tp so a TP×DP×PP
+        reshape of the same device budget — including a pure stage re-cut at
+        unchanged pp — registers as a placement change and routes through
+        the pool's migrate path instead of being silently ignored."""
+        return tuple(sorted((g.gpu_type, g.tp, g.dp, g.pp, g.stage_cuts,
+                             g.count)
                             for g in self.groups if g.model == model))
 
 

@@ -76,6 +76,8 @@ DEFAULT_GENOME: Dict[str, Any] = {
     "batch_scheme": "pow2",         # pow2 | sweet | exhaustive
     "tp_floor_large": 0,            # App. G parallel-strategy constraint
     "replica_dp": 1,                # intra-replica data parallelism (TP×DP)
+    "replica_pp": 1,                # pipeline stages per replica (pp, dp, tp)
+    "stage_balance": "even",        # even | front-light | rear-light cuts
     "intra_node_only": False,       # §7.2 (i): bound TP within a node
     "heterogeneity_aware": True,    # §7.2 (iv)
     "weighted_obj": False,          # Eq. 23
@@ -512,6 +514,11 @@ def schedule(ctx):
     if G.get("replica_dp", 1) > 1:
         # widen replicas to (dp, tp) submeshes where devices/batch allow
         new = schedulers.apply_replica_dp(new, ctx, G["replica_dp"])
+    if G.get("replica_pp", 1) > 1:
+        # deepen replicas to (pp, dp, tp) submeshes where devices/depth
+        # allow — pp stages tolerate fragmented free capacity
+        new = schedulers.apply_replica_pp(new, ctx, G["replica_pp"],
+                                          G.get("stage_balance", "even"))
     old = ctx.current_plan
     if old is None or not old.groups:
         return new

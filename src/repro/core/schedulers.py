@@ -19,10 +19,11 @@ from __future__ import annotations
 
 import math
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from repro.core.plan import Ctx, ModelSpec, Plan, ReplicaGroup, Workload
+from repro.core.plan import (Ctx, ModelSpec, Plan, ReplicaGroup, Workload,
+                             default_stage_cuts)
 
 TP_DEGREES = (1, 2, 4, 8)
 
@@ -120,6 +121,39 @@ def apply_replica_dp(plan: Plan, ctx: Ctx, dp: int) -> Plan:
             free[g.gpu_type] -= extra
             g = ReplicaGroup(g.model, g.gpu_type, g.tp, g.batch, g.count,
                              dp=dp)
+        out.append(g)
+    return Plan(tuple(out))
+
+
+def apply_replica_pp(plan: Plan, ctx: Ctx, pp: int,
+                     stage_balance: str = "even") -> Plan:
+    """Post-pass deepening each replica to a (pp, dp, tp) submesh when
+    devices allow — the ``replica_pp`` genome knob's entry point.
+
+    Deterministic and auto-falling-back like :func:`apply_replica_dp`:
+    groups are deepened in plan order; a group keeps pp=1 when the cluster
+    lacks the extra devices, when the model is recurrent (stage slicing
+    needs a homogeneous layer stack) or shallower than the pipeline.
+    Stage boundaries come from ``default_stage_cuts`` under the evolvable
+    ``stage_balance`` policy ("even" / "front-light" / "rear-light").
+    Memory cannot get worse — pp shards the layer stack over more devices —
+    so a feasible input plan stays feasible."""
+    pp = int(pp)
+    if pp <= 1 or not plan.groups:
+        return plan
+    free = {g: ctx.cluster.count(g) for g in ctx.cluster.types()}
+    for g in plan.groups:
+        free[g.gpu_type] = free.get(g.gpu_type, 0) - g.devices
+    out = []
+    for g in plan.groups:
+        z = ctx.models.get(g.model)
+        extra = g.tp * g.dp * (pp - 1) * g.count
+        if (g.pp == 1 and z is not None and not z.ssm_state
+                and z.n_layers >= pp and free.get(g.gpu_type, 0) >= extra):
+            free[g.gpu_type] -= extra
+            g = replace(g, pp=pp,
+                        stage_cuts=default_stage_cuts(z.n_layers, pp,
+                                                      stage_balance))
         out.append(g)
     return Plan(tuple(out))
 

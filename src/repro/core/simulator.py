@@ -16,7 +16,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.plan import (ClusterState, GPUType, ModelSpec, Plan,
-                             ReplicaGroup, Workload)
+                             ReplicaGroup, Workload, valid_stage_cuts)
 
 PENALTY = 1e9                   # Λ∞ for infeasible groups
 MEM_THETA = 0.8                 # Eq. 7 memory utilisation threshold
@@ -202,7 +202,8 @@ class Simulator:
                 return False, f"{g_name}: need {n} > have {cluster.count(g_name)}"
         lens = {w.model: w.prefill_len + w.decode_len for w in (workloads or [])}
         for g in plan.groups:
-            if g.count <= 0 or g.tp <= 0 or g.batch <= 0 or g.dp <= 0:
+            if (g.count <= 0 or g.tp <= 0 or g.batch <= 0 or g.dp <= 0
+                    or g.pp <= 0):
                 return False, f"degenerate group {g}"
             z = self.models.get(g.model)
             if z is not None and g.tp > 1:
@@ -212,9 +213,26 @@ class Simulator:
                     return False, (f"tp={g.tp} unshardable for {g.model} "
                                    f"(n_heads={z.n_heads}, "
                                    f"n_experts={z.n_experts})")
-            if not self.fits(g.model, g.gpu_type, g.tp, g.batch,
+            if g.pp > 1 and z is not None:
+                # pipeline stages are layer slices: recurrent-state families
+                # keep pp=1 (the engine cannot stage-slice hybrid groups) and
+                # the model must be at least pp layers deep; explicit cuts
+                # must be strictly increasing interior boundaries
+                if z.ssm_state:
+                    return False, f"pp={g.pp} unsupported for ssm {g.model}"
+                if z.n_layers < g.pp:
+                    return False, (f"pp={g.pp} deeper than {g.model}'s "
+                                   f"{z.n_layers} layers")
+                if g.stage_cuts and not valid_stage_cuts(
+                        z.n_layers, g.pp, g.stage_cuts):
+                    return False, (f"stage cuts {g.stage_cuts} invalid for "
+                                   f"pp={g.pp}, L={z.n_layers}")
+            # pp divides resident weights and KV across stages exactly like
+            # an extra tp factor for the per-device footprint check
+            if not self.fits(g.model, g.gpu_type, g.tp * g.pp, g.batch,
                              lens.get(g.model, 2048)):
-                return False, f"OOM {g.model} on {g.gpu_type} tp={g.tp} b={g.batch}"
+                return False, (f"OOM {g.model} on {g.gpu_type} tp={g.tp} "
+                               f"pp={g.pp} b={g.batch}")
         return True, ""
 
     def clear_memo(self) -> None:

@@ -368,9 +368,39 @@ def step_collective_s(z, g, tp: int, batch: int, seq: int = 1) -> float:
     return tp_collective_bytes_per_token(z, eff) * batch * seq / bw
 
 
-def rebuild_cost_s(z, g, tp: int) -> float:
-    """Shape-aware replica (re)build: each device of a tp-way replica pulls
-    its 1/tp weight shard over PCIe in parallel, so widening TP shrinks the
-    rebuild the shadow rung charges for a placement change."""
-    shard = z.weight_bytes / max(effective_tp(z, tp), 1)
+def rebuild_cost_s(z, g, tp: int, pp: int = 1) -> float:
+    """Shape-aware replica (re)build: each device of a tp-way (and pp-deep)
+    replica pulls its 1/(tp·pp) weight shard over PCIe in parallel, so
+    widening TP or deepening the pipeline shrinks the rebuild the shadow
+    rung charges for a placement change — including a stage re-cut, which
+    diffs as a placement change and re-stages only layer slices."""
+    shard = z.weight_bytes / max(effective_tp(z, tp) * max(pp, 1), 1)
     return shard / g.pcie_bw
+
+
+def pipeline_bubble_fraction(pp: int, microbatches: int) -> float:
+    """Fill/drain bubble of a pp-stage pipeline fed m microbatches:
+    (pp − 1) / (pp − 1 + m).  The engine streams each prefill chunk as up
+    to pp micro-chunks, so m defaults to the chunk stream depth — deeper
+    pipelines claw back less of their 1/pp per-stage compute win."""
+    if pp <= 1:
+        return 0.0
+    return (pp - 1) / float(pp - 1 + max(microbatches, 1))
+
+
+def stage_activation_bytes_per_token(z, pp: int) -> float:
+    """Inter-stage hand-off traffic: each of the pp−1 boundaries forwards
+    the d_model hidden state per token (replicated commit onto the next
+    stage's submesh)."""
+    if pp <= 1:
+        return 0.0
+    return (pp - 1) * z.d_model * z.dtype_bytes
+
+
+def stage_handoff_s(z, g, pp: int, batch: int, seq: int = 1) -> float:
+    """Wall-clock of one step's inter-stage activation transfers for
+    ``batch·seq`` tokens.  Stage submeshes land on separate fragments by
+    design, so the hand-off is priced at the intra-node link — the honest
+    tax that keeps shadow ranking from preferring pp when one contiguous
+    submesh (pure TP) is actually available."""
+    return stage_activation_bytes_per_token(z, pp) * batch * seq / g.intra_bw

@@ -34,15 +34,18 @@ def make_host_mesh(model_axis: int = 1):
 
 def carve_submeshes(mesh: jax.sharding.Mesh,
                     shapes: Sequence[Tuple[int, ...]],
-                    axes: Tuple[str, ...] = ("data", "model")):
+                    axes: Tuple[str, ...] = ("pipe", "data", "model")):
     """Partition ``mesh``'s devices into per-replica submeshes.
 
     Deterministic: devices are consumed in sorted-id order, so the same
     (mesh, shapes) always yields the same physical assignment — shadow
-    replay and the pool's diff/rebuild both depend on that.  Raises
-    ``ValueError`` when the requested shapes oversubscribe the mesh (the
-    caller — usually the pool's :class:`~repro.serving.sharded
-    .SubmeshAllocator` — decides whether to fall back to smaller shapes).
+    replay and the pool's diff/rebuild both depend on that.  Shapes map
+    onto the TRAILING axis names: a 2-D shape becomes a ``(data, model)``
+    submesh, a 3-D shape ``(pipe, data, model)`` — the replica-level mesh
+    of a pipelined group.  Raises ``ValueError`` when the requested shapes
+    oversubscribe the mesh (the caller — usually the pool's
+    :class:`~repro.serving.sharded.SubmeshAllocator` — decides whether to
+    fall back to smaller shapes).
     """
     devices = sorted(mesh.devices.flatten().tolist(), key=lambda d: d.id)
     need = sum(int(np.prod(s)) for s in shapes)
@@ -54,6 +57,6 @@ def carve_submeshes(mesh: jax.sharding.Mesh,
     for s in shapes:
         n = int(np.prod(s))
         grid = np.array(devices[off:off + n], dtype=object).reshape(s)
-        out.append(jax.sharding.Mesh(grid, axes[:len(s)]))
+        out.append(jax.sharding.Mesh(grid, axes[-len(s):]))
         off += n
     return out

@@ -15,7 +15,15 @@ safe):
   3. live migration of an in-flight request between replicas of DIFFERENT
      TP degree (tp=2 → tp=4 and tp=2 → unsharded) mid-decode;
   4. EnginePool failure recovery where salvage lands on a survivor with a
-     different TP degree.
+     different TP degree;
+  5. the pipeline ladder: pp=2 dense parity, pp=2 × tp=2 parity (each stage
+     on its own carved stage submesh), a mid-decode stage RE-CUT (pp=2 →
+     pp=4) with zero dropped in-flight requests and token-identical output,
+     plus a pp → tp reshape through the same wire format;
+  6. fragment tolerance: after interleaved releases leave the free set as
+     two disjoint islands, a (1, 4) alloc still succeeds (no spurious
+     SubmeshOversubscribed) and a pp=2 × tp=2 replica built ACROSS the
+     fragments is token-identical.
 """
 import os
 
@@ -31,11 +39,12 @@ import sys  # noqa: E402
 import jax  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
-from repro.core.plan import Plan, ReplicaGroup  # noqa: E402
+from repro.core.plan import Plan, ReplicaGroup, default_stage_cuts  # noqa: E402
 from repro.models import lm  # noqa: E402
 from repro.serving.engine import Engine, Request  # noqa: E402
 from repro.serving.pool import EnginePool  # noqa: E402
-from repro.serving.sharded import ShardedEngine, SubmeshAllocator  # noqa: E402
+from repro.serving.sharded import (PipelinedEngine, ShardedEngine,  # noqa: E402
+                                   SubmeshAllocator)
 
 MAX_SEQ = 64
 NEW_TOKENS = 8
@@ -157,6 +166,113 @@ def check_pool_failover(arch: str) -> None:
     print(f"PASS pool failover {arch} (tp=2 death -> tp=1 salvage)")
 
 
+def check_pipeline_parity(arch: str, pp: int = 2, tp: int = 1) -> None:
+    """A pp-stage replica — each stage on its own carved (1, tp) stage
+    submesh — must be token-identical to the single-device engine."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg)
+    ref = _drain(Engine(cfg, params, n_slots=2, max_seq_len=MAX_SEQ), prompts)
+
+    alloc = SubmeshAllocator()
+    eng = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, pp),
+                          stage_meshes=alloc.alloc_stages(pp, (1, tp)),
+                          allocator=alloc, n_slots=2, max_seq_len=MAX_SEQ)
+    got = _drain(eng, prompts)
+    assert got == ref, (f"{arch} pp={pp} tp={tp}: pipelined tokens diverge\n"
+                        f"ref={ref}\ngot={got}")
+    eng.release_devices()
+    assert alloc.free_devices == alloc.total_devices, "stage submesh leaked"
+    print(f"PASS pipeline parity {arch} pp={pp} tp={tp}")
+
+
+def check_stage_recut(arch: str) -> None:
+    """Mid-decode stage RE-CUT: a request decoding on a pp=2 replica is
+    exported (per-stage slices reassembled into the full per-layer wire
+    format), the replica's stage submeshes are released, and the request
+    resumes on a pp=4 replica with re-cut boundaries — zero dropped
+    requests, token-identical to an uninterrupted run.  Also covers the
+    pp → tp reshape through the same path."""
+    cfg, params = _setup(arch)
+    prompt = _prompts(cfg, n=1, length=10)[0]
+    ref = _drain(Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ),
+                 [prompt])[0]
+
+    for dst_kind in ("recut", "tp"):
+        alloc = SubmeshAllocator()
+        src = PipelinedEngine(cfg, params,
+                              default_stage_cuts(cfg.n_layers, 2),
+                              stage_meshes=alloc.alloc_stages(2, (1, 2)),
+                              allocator=alloc, n_slots=1,
+                              max_seq_len=MAX_SEQ)
+        src.submit(Request(rid=0, prompt=list(prompt),
+                           max_new_tokens=NEW_TOKENS))
+        for _ in range(3):                     # prefill + a few decode steps
+            src.step()
+        assert src.active, "request finished before the re-cut point"
+        (slot,) = src.active
+        head = list(src.active[slot].generated)
+        export = src.export_slot(slot)
+        src.release_devices()
+        assert not src.active, "in-flight request dropped by export"
+        if dst_kind == "recut":
+            dst = PipelinedEngine(cfg, params,
+                                  default_stage_cuts(cfg.n_layers, 4),
+                                  stage_meshes=alloc.alloc_stages(4, (1, 2)),
+                                  allocator=alloc, n_slots=1,
+                                  max_seq_len=MAX_SEQ)
+        else:
+            dst = ShardedEngine(cfg, params, alloc.alloc((1, 2)),
+                                allocator=alloc, n_slots=1,
+                                max_seq_len=MAX_SEQ)
+        assert dst.install_active(export), "install refused the re-cut slot"
+        done = dst.run_until_drained()
+        full = list(done[0].generated)
+        assert full[:len(head)] == head and full == ref, (
+            f"{arch} {dst_kind}: re-cut tokens diverge\n"
+            f"ref={ref}\ngot={full}")
+        dst.release_devices()
+        assert alloc.free_devices == alloc.total_devices, "submesh leaked"
+        print(f"PASS stage re-cut {arch} pp=2->"
+              f"{'pp=4' if dst_kind == 'recut' else 'tp=2'}")
+
+
+def check_fragmented_alloc(arch: str) -> None:
+    """Interleaved releases fragment the free set; allocation must neither
+    spuriously fail nor misplace: a (1, 4) submesh gathers across the two
+    2-device islands, and a pp=2 × tp=2 replica whose stages land on
+    SEPARATE islands is token-identical."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg)
+    ref = _drain(Engine(cfg, params, n_slots=2, max_seq_len=MAX_SEQ), prompts)
+
+    alloc = SubmeshAllocator()
+    holds = [alloc.alloc((1, 2)) for _ in range(4)]
+    alloc.release(holds[1])
+    alloc.release(holds[3])
+    frags = [len(f) for f in alloc.fragments()]
+    assert frags == [2, 2], f"expected two 2-device islands, got {frags}"
+    # the satellite-1 contract: enough devices free => alloc succeeds even
+    # though no single fragment holds the request
+    span = alloc.try_alloc((1, 4))
+    assert span is not None, "spurious SubmeshOversubscribed on fragments"
+    alloc.release(span)
+
+    meshes = alloc.try_alloc_stages(2, (1, 2))
+    assert meshes is not None
+    ids = [sorted(d.id for d in m.devices.flatten()) for m in meshes]
+    assert ids[0] != ids[1], "stages should land on distinct islands"
+    eng = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, 2),
+                          stage_meshes=meshes, allocator=alloc,
+                          n_slots=2, max_seq_len=MAX_SEQ)
+    got = _drain(eng, prompts)
+    assert got == ref, f"fragmented pp replica diverges\nref={ref}\ngot={got}"
+    eng.release_devices()
+    alloc.release(holds[0])
+    alloc.release(holds[2])
+    assert alloc.free_devices == alloc.total_devices, "submesh leaked"
+    print(f"PASS fragmented alloc {arch} (islands={frags})")
+
+
 def main() -> int:
     n = len(jax.devices())
     assert n >= 8, f"need 8 forced host devices, got {n}"
@@ -165,6 +281,10 @@ def main() -> int:
     check_parity("mixtral-8x7b", (1, 2))        # expert parallel
     check_cross_tp_migration("qwen2-1.5b")
     check_pool_failover("qwen2-1.5b")
+    check_pipeline_parity("qwen2-1.5b", pp=2, tp=1)
+    check_pipeline_parity("qwen2-1.5b", pp=2, tp=2)   # pp×tp = 2×2
+    check_stage_recut("qwen2-1.5b")
+    check_fragmented_alloc("qwen2-1.5b")
     print("sharded_check: all checks passed")
     return 0
 

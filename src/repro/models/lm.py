@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -470,6 +470,106 @@ def step_with_cache(params: Params, cfg: ModelConfig, cache: Params,
                                               cache["k"], cache["v"], cache["pos"]))
         new_cache = {"k": K, "v": V, "pos": P}
 
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# pipeline stages (layer-granular slicing for pp replicas)
+# --------------------------------------------------------------------------- #
+def stage_sliceable(cfg: ModelConfig) -> bool:
+    """Families whose params hold ONE homogeneous stacked ``layers`` pytree
+    and whose contiguous cache stacks every leaf on a leading layer axis, so
+    a pipeline stage is a pure ``[lo:hi]`` slice: dense/moe (incl. pure
+    SWA), MLA, vlm, and plain SSM.  Hybrid recurrent groups, encoder-decoder
+    xattn, and gemma-style local/global pairs interleave heterogeneous
+    blocks and stay at pp=1."""
+    return (cfg.family != "hybrid"
+            and not cfg.is_encoder_decoder
+            and cfg.local_global_every == 0)
+
+
+def slice_stage_params(cfg: ModelConfig, params: Params, lo: int, hi: int,
+                       first: bool, last: bool) -> Params:
+    """Parameter slice for one pipeline stage over layers ``[lo, hi)``.
+
+    The first stage carries the embedding table (token lookup); the last
+    carries the final norm and LM head — which is the embedding again for
+    tied-weight configs, so those replicate the table on both end stages.
+    """
+    sp: Params = {"layers": jax.tree.map(lambda t: t[lo:hi], params["layers"])}
+    if first or (last and cfg.tie_embeddings):
+        sp["embed"] = params["embed"]
+    if last:
+        sp["final_norm"] = params["final_norm"]
+        if not cfg.tie_embeddings:
+            sp["lm_head"] = params["lm_head"]
+    return sp
+
+
+def slice_stage_cache(cache: Params, lo: int, hi: int) -> Params:
+    """Cache slice for layers ``[lo, hi)`` — every contiguous-cache leaf of a
+    stage-sliceable family has a leading layer axis."""
+    return jax.tree.map(lambda t: t[lo:hi], cache)
+
+
+def concat_stage_states(parts: Sequence[Params]) -> Params:
+    """Reassemble per-stage ``extract_slot`` states (host NumPy, leading
+    layer axis) into the full per-layer wire format — byte-identical to a
+    single-engine extract, so a pipelined export installs anywhere."""
+    return jax.tree.map(lambda *ls: np.concatenate(ls, axis=0), *parts)
+
+
+def stage_step(params: Params, cfg: ModelConfig, cache: Params,
+               x: jax.Array, pos2: jax.Array, *, first: bool, last: bool
+               ) -> Tuple[jax.Array, Params]:
+    """Cache-backed forward over ONE pipeline stage's layer slice.
+
+    ``x`` is int32 tokens (B, C) on the first stage and the previous stage's
+    hidden state (B, C, D) otherwise; returns logits (B, C, V) on the last
+    stage and the hidden state to hand off otherwise.  Composing the stages
+    in order reproduces :func:`step_with_cache` exactly — same scans, same
+    reduction order — which is what makes pp parity bit-exact in float32.
+    """
+    dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if first:
+        x = params["embed"][x].astype(dtype)
+        if cfg.local_global_every:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            lp, conv, ssm = xs
+            h, (c2, s2) = _mamba_layer_fwd(lp, cfg, h, state=(conv, ssm))
+            return h, (c2, s2)
+        x, (c2, s2) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["conv"], cache["ssm"]))
+        new_cache = {"conv": c2, "ssm": s2}
+    elif cfg.mla is not None:
+        def body(h, xs):
+            lp, ckv, pc = xs
+            h, nc, _ = _decoder_layer_fwd(lp, cfg, h, pos2, None, cache=(ckv, pc))
+            return h, nc
+        x, (CKV, P) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["ckv"], cache["pos"]))
+        new_cache = {"ckv": CKV, "pos": P}
+    else:
+        window = cfg.sliding_window
+
+        def body(h, xs):
+            lp, kc, vc, pc = xs
+            h, kv, _ = _decoder_layer_fwd(lp, cfg, h, pos2, window,
+                                          cache=(kc, vc, pc))
+            return h, kv
+        x, (K, V, P) = jax.lax.scan(body, x, (params["layers"],
+                                              cache["k"], cache["v"], cache["pos"]))
+        new_cache = {"k": K, "v": V, "pos": P}
+
+    if not last:
+        return x, new_cache
     x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
     head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
     logits = x @ head.astype(x.dtype)

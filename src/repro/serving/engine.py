@@ -656,9 +656,19 @@ class Engine(RequestSchedulingMixin):
                      if with_state else None)
             self._release_pages(slot, st)
         else:
-            cache = (lm.extract_slot(self.cfg, self.cache, slot)
-                     if with_state else None)
+            cache = self._extract_slot_state(slot) if with_state else None
         return SlotExport(cont, st, self.cfg, cache, st.position)
+
+    def _extract_slot_state(self, slot: int):
+        """Contiguous-path slot extract — overridden by engines whose cache
+        is not one monolithic pytree (PipelinedEngine reassembles per-stage
+        slices into the same full per-layer wire format)."""
+        return lm.extract_slot(self.cfg, self.cache, slot)
+
+    def _install_slot_state(self, slot: int, state, position: int):
+        """Contiguous-path slot install; returns the new cache pytree.
+        The pipelined override slices ``state`` at its stage boundaries."""
+        return lm.install_slot(self.cfg, self.cache, slot, state, position)
 
     def export_active(self, with_state: bool = True) -> List[SlotExport]:
         """Export every in-flight request (lowest slot first)."""
@@ -687,8 +697,8 @@ class Engine(RequestSchedulingMixin):
         if self.paged:
             return self._install_paged(export, slot)
         try:
-            cache = lm.install_slot(self.cfg, self.cache, slot,
-                                    export.cache, export.position)
+            cache = self._install_slot_state(slot, export.cache,
+                                             export.position)
         except lm.SlotMigrationError:
             return False
         self.cache = self._adopt_cache(cache)

@@ -386,6 +386,10 @@ class ShadowBackend:
     """
 
     REF_PREFILL = 256                    # roofline reference lengths
+    # pipeline-bubble depth: the engine streams each prefill chunk as up to
+    # pp micro-chunks, and the chunked-prefill chunk stream keeps ~4 in
+    # flight — the m in (pp-1)/(pp-1+m)
+    PIPELINE_MICROBATCHES = 4
 
     def __init__(self, sim: Simulator, seed: int = 0, slots_cap: int = 2,
                  max_replicas_per_group: int = 1, requests_per_model: int = 4,
@@ -415,12 +419,12 @@ class ShadowBackend:
         self._pending: Optional[List[Tuple[str, Request]]] = None
         self._pending_off = 0
         self._t0 = 0.0
-        self._costs: Dict[Tuple[str, str, int], ShadowCosts] = {}
+        self._costs: Dict[Tuple, ShadowCosts] = {}
         self._tpl: Dict[Tuple[str, int, int], List[int]] = {}
 
     # ------------------------------------------------------------------ #
     def _costs_for(self, g: ReplicaGroup) -> ShadowCosts:
-        key = (g.model, g.gpu_type, g.tp, g.dp)
+        key = (g.model, g.gpu_type, g.tp, g.dp, g.pp)
         hit = self._costs.get(key)
         if hit is not None:
             return hit
@@ -443,6 +447,19 @@ class ShadowBackend:
             # collective cost is already inside prefill/decode_time Eq. 6)
             k_p /= g.dp
             k_d /= g.dp
+            if g.pp > 1:
+                # honest PP: prefill streams micro-chunks, so per-token work
+                # drops to 1/pp minus the fill/drain bubble; decode is
+                # SEQUENTIAL across stages (a token's step latency spans the
+                # whole pipeline — no 1/pp there), and every boundary pays
+                # the activation hand-off.  This is what lets shadow replay
+                # rank pp-vs-tp honestly: pp wins on fragmented capacity or
+                # unshardable heads, NOT as a free decode speedup.
+                bub = hlo_analysis.pipeline_bubble_fraction(
+                    g.pp, self.PIPELINE_MICROBATCHES)
+                hand = hlo_analysis.stage_handoff_s(z, gpu, g.pp, 1)
+                k_p = k_p / g.pp / max(1.0 - bub, 1e-6) + hand
+                k_d = k_d + hand
             costs = ShadowCosts(prefill_per_token_s=k_p * self.time_scale,
                                 decode_step_s=k_d * self.time_scale,
                                 migrate_slot_s=0.5 * k_d * self.time_scale)
@@ -562,7 +579,8 @@ class ShadowBackend:
             z = self.sim.models.get(g.model)
             gpu = self.sim.hardware.get(g.gpu_type)
             if z is not None and gpu is not None:
-                handoff += (hlo_analysis.rebuild_cost_s(z, gpu, g.tp)
+                handoff += (hlo_analysis.rebuild_cost_s(z, gpu, g.tp,
+                                                        pp=g.pp)
                             * self.time_scale)
         self.vnow += handoff
         return ReconfigReport(wall_s=handoff, simulated_s=sim_cost,

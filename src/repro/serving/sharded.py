@@ -1,11 +1,16 @@
-"""Mesh-sharded replica execution: TP×DP engines on carved submeshes.
+"""Mesh-sharded replica execution: TP×DP×PP engines on carved submeshes.
 
 Each :class:`repro.core.plan.ReplicaGroup` with ``tp * dp > 1`` materialises
 as a :class:`ShardedEngine` running on a private ``(dp, tp)`` submesh carved
 out of the process's device set by a :class:`SubmeshAllocator` (the dynamic
 counterpart of :func:`repro.launch.mesh.carve_submeshes` — same deterministic
-sorted-device-id order, but replicas come and go, so carving is an
-alloc/release protocol instead of a one-shot partition).
+device order, but replicas come and go, so carving is an alloc/release
+protocol instead of a one-shot partition).  A group with ``pp > 1`` instead
+builds a :class:`PipelinedEngine`: the layer stack is cut at the group's
+``stage_cuts`` and each stage runs on its OWN ``(dp, tp)`` stage submesh —
+stages tolerate fragmented free sets because each stage submesh can land on
+a different free fragment (FlexPipe's observation: pipeline depth is the
+degree of freedom that soaks up odd-sized capacity TP cannot use).
 
 Execution strategy (how the sharding actually happens):
 
@@ -27,26 +32,39 @@ Execution strategy (how the sharding actually happens):
   * **DP** — the slot batch is sharded across the submesh's ``data`` axis
     when divisible (``sharding._batch_entry`` falls back to replication
     otherwise), so one replica's decode step fans out over dp weight copies.
+  * **PP** — per-stage params are pure ``layers[lo:hi]`` slices
+    (:func:`repro.models.lm.slice_stage_params`); prefill streams each
+    chunk through the stages in up to ``pp`` micro-chunks (bounding the
+    inter-stage activation footprint; jax's async dispatch lets stage ``i``
+    start on micro-chunk ``m+1`` while stage ``i+1`` still runs ``m``) and
+    decode hands the (B, 1, D) hidden state between stage submeshes via a
+    replicated ``device_put`` — d_model·dtype bytes per token, the
+    hand-off term :mod:`repro.distributed.hlo_analysis` prices.
 
 Migration interop: slot export/install rides the existing host-side NumPy
 wire formats (:func:`repro.models.lm.extract_slot` and friends), which are
-TP-agnostic — a slot exported from a tp=2 replica installs into a tp=1 or
-tp=4 survivor unchanged.  :meth:`ShardedEngine._adopt_cache` re-commits the
-cache sharding after such host-side installs so the next step hits the
-compiled partitioned program instead of recompiling for an uncommitted
-layout.
+TP-agnostic AND stage-agnostic — a pipelined export concatenates its
+per-stage slices back into the full per-layer wire format
+(:func:`repro.models.lm.concat_stage_states`), so a slot exported from a
+pp=2 replica installs into a pp=4, tp=2, or plain replica unchanged; that
+is what lets a reconfigure RE-CUT stage boundaries mid-decode without
+dropping in-flight requests.  :meth:`ShardedEngine._adopt_cache` (and the
+pipelined per-stage variant) re-commits the cache sharding after such
+host-side installs so the next step hits the compiled partitioned program
+instead of recompiling for an uncommitted layout.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.configs.base import ModelConfig
-from repro.core.plan import ReplicaGroup
+from repro.core.plan import ReplicaGroup, default_stage_cuts, valid_stage_cuts
 from repro.distributed import sharding
 from repro.models import flags, lm
 from repro.serving.engine import Engine
@@ -57,19 +75,30 @@ class SubmeshOversubscribed(RuntimeError):
 
 
 class SubmeshAllocator:
-    """Carves per-replica ``(dp, tp)`` submeshes from a fixed device set.
+    """Carves per-replica (or per-stage) submeshes from a fixed device set.
 
     Deterministic: devices are handed out in ascending ``device.id`` order
     and returned to the free list in sorted order, so the same alloc/release
     sequence always yields the same physical placement — replica rebuilds
     are reproducible and the shadow rung's cost attribution stays stable.
+
+    The free set FRAGMENTS under interleaved alloc/release (elastic traces
+    release replicas out of order), so allocation is fragment-aware:
+    :meth:`alloc` best-fits the request into the smallest contiguous-id
+    fragment that holds it (a TP/DP submesh wants one bandwidth island) and
+    falls back to gathering across fragments rather than spuriously raising
+    :class:`SubmeshOversubscribed` while enough devices are free.
+    :meth:`alloc_stages` carves one submesh PER pipeline stage, so a pp
+    replica soaks up capacity no single fragment could serve.
     """
 
     def __init__(self, devices: Optional[Sequence] = None,
-                 axes: Tuple[str, ...] = ("data", "model")):
+                 axes: Tuple[str, ...] = ("pipe", "data", "model"),
+                 mesh_factory: Optional[Callable] = None):
         if devices is None:
             devices = jax.devices()
         self.axes = tuple(axes)
+        self._mesh_factory = mesh_factory or Mesh
         self._free: List = sorted(devices, key=lambda d: d.id)
         # id(mesh) -> (mesh, devices): holding the mesh keeps its id stable
         self._owned: Dict[int, Tuple[Mesh, List]] = {}
@@ -82,24 +111,70 @@ class SubmeshAllocator:
     def total_devices(self) -> int:
         return len(self._free) + sum(len(d) for _, d in self._owned.values())
 
+    def fragments(self) -> List[List]:
+        """Maximal runs of consecutive device ids in the free set — the
+        bandwidth islands interleaved releases leave behind."""
+        out: List[List] = []
+        for d in self._free:
+            if out and d.id == out[-1][-1].id + 1:
+                out[-1].append(d)
+            else:
+                out.append([d])
+        return out
+
+    def _select(self, n: int) -> List:
+        """Pick ``n`` free devices: best-fit into the smallest fragment that
+        holds the whole request, else gather across fragments in id order
+        (correct, just bandwidth-fragmented — never a spurious failure)."""
+        fits = [f for f in self.fragments() if len(f) >= n]
+        take = min(fits, key=len)[:n] if fits else self._free[:n]
+        ids = {d.id for d in take}
+        self._free = [d for d in self._free if d.id not in ids]
+        return take
+
     def can_alloc(self, shape: Sequence[int]) -> bool:
         return int(np.prod(tuple(shape))) <= len(self._free)
 
     def alloc(self, shape: Sequence[int]) -> Mesh:
+        """Carve one submesh.  ``shape`` maps onto the TRAILING axis names:
+        2-D shapes become ``(data, model)`` meshes, 3-D ``(pipe, data,
+        model)``.  Raises only when the free set is genuinely too small."""
         shape = tuple(int(s) for s in shape)
         n = int(np.prod(shape))
         if n > len(self._free):
             raise SubmeshOversubscribed(
                 f"submesh {shape} needs {n} devices but only "
                 f"{len(self._free)} of {self.total_devices} are free")
-        take, self._free = self._free[:n], self._free[n:]
+        take = self._select(n)
         grid = np.array(take, dtype=object).reshape(shape)
-        mesh = Mesh(grid, self.axes[:len(shape)])
+        mesh = self._mesh_factory(grid, self.axes[-len(shape):])
         self._owned[id(mesh)] = (mesh, take)
         return mesh
 
     def try_alloc(self, shape: Sequence[int]) -> Optional[Mesh]:
         return self.alloc(shape) if self.can_alloc(shape) else None
+
+    def can_alloc_stages(self, pp: int, stage_shape: Sequence[int]) -> bool:
+        return pp * int(np.prod(tuple(stage_shape))) <= len(self._free)
+
+    def alloc_stages(self, pp: int,
+                     stage_shape: Sequence[int]) -> List[Mesh]:
+        """Carve ``pp`` stage submeshes of ``stage_shape`` each.  Stages may
+        land on different fragments — that is the point: a (pp=2, tp=2)
+        replica fits a free set of two 2-device islands that no (1, 4)
+        submesh prefers."""
+        if not self.can_alloc_stages(pp, stage_shape):
+            n = pp * int(np.prod(tuple(stage_shape)))
+            raise SubmeshOversubscribed(
+                f"{pp} stages of {tuple(stage_shape)} need {n} devices but "
+                f"only {len(self._free)} of {self.total_devices} are free")
+        return [self.alloc(stage_shape) for _ in range(pp)]
+
+    def try_alloc_stages(self, pp: int,
+                         stage_shape: Sequence[int]) -> Optional[List[Mesh]]:
+        if not self.can_alloc_stages(pp, stage_shape):
+            return None
+        return self.alloc_stages(pp, stage_shape)
 
     def release(self, mesh: Mesh) -> None:
         """Return a submesh's devices; releasing twice (or a foreign mesh)
@@ -190,19 +265,231 @@ class ShardedEngine(Engine):
             self.allocator = None
 
 
+class PipelinedEngine(Engine):
+    """An :class:`Engine` whose layer stack is cut into ``pp`` stages.
+
+    Stage ``i`` holds params/cache for layers ``[bounds[i], bounds[i+1])``
+    (``bounds = (0,) + stage_cuts + (n_layers,)``) — a pure slice of the
+    stacked ``params["layers"]`` pytree — plus the embedding on the first
+    stage and the final norm + LM head on the last.  With ``stage_meshes``
+    each stage commits onto its own ``(dp, tp)`` submesh exactly like a
+    :class:`ShardedEngine`; without meshes (single-device hosts, tier-1
+    tests) the stages share the default device and the pipeline is purely
+    logical — token-identical either way, because composing the per-stage
+    scans reproduces the monolithic forward's reduction order.
+
+    Scheduling, slots, chunked prefill and migration all come from the base
+    engine unchanged: only the two jitted step closures are replaced by
+    Python stage loops (prefill additionally micro-chunks each prefill
+    chunk, see :meth:`_pipe_prefill`).  The paged KV pool is layer-
+    monolithic per engine, so pipelined replicas always run the contiguous
+    cache path; slot export/install reassembles / re-slices the full
+    per-layer wire format, so re-cutting stage boundaries (or moving
+    pp↔tp) migrates in-flight requests without dropping them.
+    """
+
+    def __init__(self, cfg: ModelConfig, params,
+                 stage_cuts: Sequence[int],
+                 stage_meshes: Optional[Sequence[Mesh]] = None,
+                 allocator: Optional[SubmeshAllocator] = None,
+                 microbatches: Optional[int] = None, **kw):
+        if not lm.stage_sliceable(cfg):
+            raise ValueError(
+                f"{cfg.name}: family {cfg.family!r} cannot be stage-sliced")
+        cuts = tuple(int(c) for c in stage_cuts)
+        pp = len(cuts) + 1
+        if pp < 2 or not valid_stage_cuts(cfg.n_layers, pp, cuts):
+            raise ValueError(
+                f"invalid stage cuts {cuts} for a {cfg.n_layers}-layer model")
+        self.stage_cuts = cuts
+        self._bounds = (0,) + cuts + (cfg.n_layers,)
+        self.stage_meshes = (list(stage_meshes)
+                             if stage_meshes is not None else None)
+        if self.stage_meshes is not None and len(self.stage_meshes) != pp:
+            raise ValueError(
+                f"got {len(self.stage_meshes)} stage meshes for pp={pp}")
+        self.allocator = allocator
+        self.microbatches = pp if microbatches is None else int(microbatches)
+        # the paged pool is per-engine and layer-monolithic: pp replicas run
+        # the contiguous cache path (prefix reuse is a pp=1 feature for now)
+        kw["paged"] = False
+        kw.pop("use_paged_kernel", None)
+        super().__init__(cfg, params, **kw)
+        self._build_stages(params)
+
+    # -------------------------------------------------------------- #
+    @property
+    def pp(self) -> int:
+        return len(self._bounds) - 1
+
+    @property
+    def tp(self) -> int:
+        if self.stage_meshes:
+            return self.stage_meshes[0].shape.get("model", 1)
+        return 1
+
+    @property
+    def dp(self) -> int:
+        if self.stage_meshes:
+            return self.stage_meshes[0].shape.get("data", 1)
+        return 1
+
+    def _build_stages(self, params) -> None:
+        cfg, pp = self.cfg, self.pp
+        full_cache = self.cache
+        self._stage_fns: List = []
+        self._stage_ep: List = []
+        self._stage_ns: List = [None] * pp
+        self.stage_decisions: List = [None] * pp
+        stage_params, stage_caches = [], []
+        for i in range(pp):
+            lo, hi = self._bounds[i], self._bounds[i + 1]
+            first, last = i == 0, i == pp - 1
+            sp = lm.slice_stage_params(cfg, params, lo, hi, first, last)
+            sc = lm.slice_stage_cache(full_cache, lo, hi)
+            mesh = self.stage_meshes[i] if self.stage_meshes else None
+            if mesh is not None:
+                pol = dataclasses.replace(sharding.make_policy(mesh, cfg),
+                                          fsdp_axis=None)
+                decision = sharding.sharding_decision(cfg, pol, sp)
+                self.stage_decisions[i] = decision
+                sp = jax.device_put(
+                    sp, sharding._ns(mesh, decision.param_specs))
+                ns = sharding._ns(mesh, sharding.cache_pspecs(cfg, pol, sc))
+                sc = jax.device_put(sc, ns)
+                self._stage_ns[i] = ns
+                self._stage_ep.append({"mesh": mesh, "axis": pol.tp_axis}
+                                      if pol.ep else None)
+            else:
+                self._stage_ep.append(None)
+            stage_params.append(sp)
+            stage_caches.append(sc)
+            self._stage_fns.append(self._make_stage_fn(first, last))
+        self.params = stage_params
+        self.cache = stage_caches
+        self._decode = self._pipe_decode
+        self._prefill = self._pipe_prefill
+
+    def _make_stage_fn(self, first: bool, last: bool):
+        cfg = self.cfg
+
+        def _fn(p, c, x, pos2, active, reset):
+            c = lm.reset_slots(cfg, c, reset)
+            out, c2 = lm.stage_step(p, cfg, c, x, pos2,
+                                    first=first, last=last)
+            c2 = lm.mask_cache_update(cfg, c, c2, active)
+            if last:
+                out = jnp.argmax(out[:, -1, :], axis=-1).astype(jnp.int32)
+            return out, c2
+        return jax.jit(_fn)
+
+    def _run_stages(self, params, caches, x, pos2, active, reset):
+        """One micro-chunk through every stage in order.  Between stage
+        submeshes the hidden state is re-committed replicated onto the next
+        stage's mesh — the inter-stage activation hand-off (d_model·dtype
+        bytes per token) that the shadow cost model charges for."""
+        new = []
+        for i, fn in enumerate(self._stage_fns):
+            if i and self.stage_meshes is not None:
+                x = jax.device_put(
+                    x, NamedSharding(self.stage_meshes[i], PartitionSpec()))
+            ep = self._stage_ep[i]
+            if ep is not None:
+                with flags.scoped(ep_shard=ep):
+                    x, c2 = fn(params[i], caches[i], x, pos2, active, reset)
+            else:
+                x, c2 = fn(params[i], caches[i], x, pos2, active, reset)
+            new.append(c2)
+        return x, new
+
+    def _pipe_decode(self, params, caches, tokens, positions, active, reset):
+        """Decode hands ONE token's hidden state stage to stage — a decode
+        step's latency spans all stages (the cost model does not divide
+        decode time by pp; that honesty is what keeps pp from dominating
+        tp in shadow ranking)."""
+        return self._run_stages(params, caches, tokens, positions[:, None],
+                                active, reset)
+
+    def _pipe_prefill(self, params, caches, tokens, positions, active, reset):
+        """Microbatched prefill: split the chunk into up to ``microbatches``
+        equal micro-chunks and stream them through the stages.  Sequential
+        micro-chunks against the cache are exactly chunked prefill, so this
+        is semantically identical to one big chunk; structurally it bounds
+        the inter-stage activation buffer and (via jax async dispatch) lets
+        consecutive stages overlap on different micro-chunks.  Only the
+        first micro-chunk applies the slot reset."""
+        B, C = tokens.shape
+        mb = max(min(self.microbatches, C), 1)
+        if mb > 1 and C % mb == 0:
+            w = C // mb
+            spans = [(j * w, (j + 1) * w) for j in range(mb)]
+        else:
+            spans = [(0, C)]
+        no_reset = np.zeros((B,), bool)
+        out = None
+        for j, (s, e) in enumerate(spans):
+            out, caches = self._run_stages(
+                params, caches, tokens[:, s:e], positions[:, s:e],
+                active, reset if j == 0 else no_reset)
+        return out, caches
+
+    # ------------------------------------------------------------------ #
+    # migration wire format: reassemble / re-slice at stage boundaries
+    # ------------------------------------------------------------------ #
+    def _extract_slot_state(self, slot: int):
+        return lm.concat_stage_states(
+            [lm.extract_slot(self.cfg, c, slot) for c in self.cache])
+
+    def _install_slot_state(self, slot: int, state, position: int):
+        new = []
+        for i, c in enumerate(self.cache):
+            lo, hi = self._bounds[i], self._bounds[i + 1]
+            part = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], state)
+            new.append(lm.install_slot(self.cfg, c, slot, part, position))
+        return new
+
+    def _adopt_cache(self, caches):
+        if self.stage_meshes is None:
+            return caches
+        return [c if ns is None else jax.device_put(c, ns)
+                for c, ns in zip(caches, self._stage_ns)]
+
+    def release_devices(self) -> None:
+        """Return every stage submesh to the allocator (idempotent)."""
+        if self.allocator is not None and self.stage_meshes:
+            for m in self.stage_meshes:
+                self.allocator.release(m)
+        self.allocator = None
+
+
 def engine_for_group(cfg: ModelConfig, params, group: ReplicaGroup,
                      allocator: Optional[SubmeshAllocator], **kw) -> Engine:
     """Build the right engine for one replica of ``group``.
 
-    A ``tp*dp > 1`` group gets a :class:`ShardedEngine` on a freshly carved
-    ``(dp, tp)`` submesh when the allocator has the devices; otherwise —
-    single-device group, no allocator (CPU test host), or not enough free
+    ``pp > 1`` groups build a :class:`PipelinedEngine` whose stages each get
+    their own carved ``(dp, tp)`` stage submesh (or no meshes at all on a
+    CPU test host — the logical pipeline is still token-identical).  A
+    ``tp*dp > 1`` single-stage group gets a :class:`ShardedEngine` on one
+    carved submesh.  Otherwise — single-device group, or not enough free
     devices (a plan the guard chain admitted but hardware shrank under) —
     it degrades to the plain single-device :class:`Engine`, which is
     token-identical, just slower.
     """
+    if group.pp > 1 and lm.stage_sliceable(cfg) and cfg.n_layers >= group.pp:
+        cuts = group.stage_cuts or default_stage_cuts(cfg.n_layers, group.pp)
+        if valid_stage_cuts(cfg.n_layers, group.pp, cuts):
+            meshes = None
+            if allocator is not None:
+                meshes = allocator.try_alloc_stages(
+                    group.pp, group.stage_submesh_shape)
+                if meshes is None:  # shrunk hardware: degrade below
+                    cuts = None
+            if cuts is not None:
+                return PipelinedEngine(cfg, params, cuts,
+                                       stage_meshes=meshes,
+                                       allocator=allocator, **kw)
     if allocator is not None and group.tp * group.dp > 1:
-        sub = allocator.try_alloc(group.submesh_shape)
+        sub = allocator.try_alloc(group.stage_submesh_shape)
         if sub is not None:
             return ShardedEngine(cfg, params, sub, allocator=allocator, **kw)
     return Engine(cfg, params, **kw)

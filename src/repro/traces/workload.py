@@ -178,6 +178,37 @@ def elastic_cluster_traces() -> Dict[str, Trace]:
 
 
 # --------------------------------------------------------------------------- #
+# fragmented-cluster trace: elastic churn that leaves non-contiguous free
+# islands behind (spot preemption / co-tenant checkerboarding), driving the
+# pipeline-vs-tensor-parallel capacity benchmark.
+# --------------------------------------------------------------------------- #
+# Per-window free-island sizes on one 8-device host.  Interleaved releases
+# leave the free set as disjoint runs of consecutive device ids: a tp-only
+# replica needs its whole submesh inside ONE island, while a pipelined
+# replica places each stage submesh on its own island.  The windows are
+# deliberately non-monotone and odd-sized (islands appear, merge, shrink).
+FRAGMENT_WINDOWS: Tuple[Tuple[int, ...], ...] = (
+    (2, 2),        # checkerboard: two 2-islands
+    (4, 2),        # a neighbour finishes — one 4-island appears
+    (2, 2, 2),     # re-fragmented three ways
+    (8,),          # fully defragmented host
+    (2, 3),        # odd remainder after a 3-wide release
+)
+
+
+def fragmented_cluster_traces(gpu: str = "H100-80G") -> Dict[str, Trace]:
+    """One trace whose per-window device count is the SUM of that window's
+    free islands (``FRAGMENT_WINDOWS``); ClusterState cannot express
+    adjacency, so consumers that care about placement (the pipeline
+    fragmentation benchmark) read the island structure from
+    ``FRAGMENT_WINDOWS`` keyed by observation index."""
+    wl = (Workload(_M["1.5B"], 8, 64, 64),)
+    rows = [(wl, ClusterState(((gpu, sum(win)),)))
+            for win in FRAGMENT_WINDOWS]
+    return {"fragmented-islands": _mk("fragmented-islands", rows, ("1.5B",))}
+
+
+# --------------------------------------------------------------------------- #
 # §7.1 phase-profile traces (Table 14) — DistServe / HexGen comparisons
 # --------------------------------------------------------------------------- #
 _SHAREGPT_PHASES = [

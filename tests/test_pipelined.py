@@ -1,0 +1,242 @@
+"""Pipeline-parallel replica axis: stage cuts, plan guards, scheduler knob,
+and single-device PipelinedEngine parity + mid-decode stage re-cut.
+
+Everything here runs on ONE device — a PipelinedEngine without stage meshes
+is a purely logical pipeline (same scans, same reduction order), so token
+identity against the monolithic Engine holds exactly in float32.  The real
+carved-stage-submesh path runs in the ``sharded_check`` subprocess ladder.
+"""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.plan import (HARDWARE, ClusterState, Plan, ReplicaGroup,
+                             Workload, default_stage_cuts, qwen25,
+                             valid_stage_cuts)
+from repro.core.simulator import Simulator
+from repro.models import lm
+from repro.serving.engine import Engine, Request
+from repro.serving.sharded import PipelinedEngine
+
+MAX_SEQ = 48
+NEW = 6
+
+
+# --------------------------------------------------------------------------- #
+# stage-cut helpers
+# --------------------------------------------------------------------------- #
+def test_default_stage_cuts_shapes():
+    assert default_stage_cuts(4, 1) == ()
+    assert default_stage_cuts(4, 2) == (2,)
+    assert default_stage_cuts(4, 4) == (1, 2, 3)
+    assert default_stage_cuts(28, 4) == (7, 14, 21)
+    assert default_stage_cuts(3, 4) == ()         # shallower than pipeline
+    assert default_stage_cuts(4, 2, "front-light") == (1,)
+    assert default_stage_cuts(4, 2, "rear-light") == (3,)
+
+
+def test_default_stage_cuts_always_valid():
+    for n_layers in (2, 3, 4, 5, 7, 28, 80):
+        for pp in (2, 3, 4, 8):
+            if n_layers < pp:
+                continue
+            for bal in ("even", "front-light", "rear-light"):
+                cuts = default_stage_cuts(n_layers, pp, bal)
+                assert valid_stage_cuts(n_layers, pp, cuts), \
+                    (n_layers, pp, bal, cuts)
+
+
+def test_valid_stage_cuts_rejects_bad_boundaries():
+    assert valid_stage_cuts(4, 1, ())
+    assert not valid_stage_cuts(4, 1, (2,))
+    assert not valid_stage_cuts(4, 2, ())         # wrong arity
+    assert not valid_stage_cuts(4, 2, (0,))       # empty first stage
+    assert not valid_stage_cuts(4, 2, (4,))       # empty last stage
+    assert not valid_stage_cuts(4, 3, (2, 2))     # not strictly increasing
+
+
+# --------------------------------------------------------------------------- #
+# plan schema + feasibility guards + scheduler knob
+# --------------------------------------------------------------------------- #
+def test_replica_group_pp_devices_and_placement_diffing():
+    g = ReplicaGroup("m", "H100-80G", tp=2, batch=4, count=1, dp=1,
+                     pp=2, stage_cuts=(14,))
+    assert g.devices == 4
+    assert g.submesh_shape == (2, 1, 2)
+    assert g.stage_submesh_shape == (1, 2)
+    recut = dataclasses.replace(g, stage_cuts=(20,))
+    # a pure re-cut at unchanged pp must diff as a placement change so the
+    # pool routes it through migrate instead of silently ignoring it
+    assert Plan((g,)).placement("m") != Plan((recut,)).placement("m")
+
+
+def _sim():
+    return Simulator({"7B": qwen25("7B")}, HARDWARE)
+
+
+def test_plan_feasible_pp_guards():
+    sim = _sim()
+    cl = ClusterState((("H100-80G", 8),))
+    wl = [Workload("7B", 4, 128, 128)]
+
+    ok, _ = sim.plan_feasible(
+        Plan((ReplicaGroup("7B", "H100-80G", 2, 4, 1, pp=2),)), cl, wl)
+    assert ok
+    ok, why = sim.plan_feasible(
+        Plan((ReplicaGroup("7B", "H100-80G", 1, 4, 1, pp=0),)), cl, wl)
+    assert not ok and "degenerate" in why
+    ok, why = sim.plan_feasible(
+        Plan((ReplicaGroup("7B", "H100-80G", 1, 4, 1, pp=64),)),
+        ClusterState((("H100-80G", 64),)), wl)
+    assert not ok and "deeper" in why
+    ok, why = sim.plan_feasible(
+        Plan((ReplicaGroup("7B", "H100-80G", 1, 4, 1, pp=2,
+                           stage_cuts=(0,)),)), cl, wl)
+    assert not ok and "stage cuts" in why
+    # device budget counts pp: pp=2 tp=2 count=3 -> 12 > 8
+    ok, _ = sim.plan_feasible(
+        Plan((ReplicaGroup("7B", "H100-80G", 2, 4, 3, pp=2),)), cl, wl)
+    assert not ok
+
+
+def test_plan_feasible_pp_divides_memory():
+    """A model that OOMs at tp=1 on a small device must become feasible when
+    the layer stack splits across pipeline stages."""
+    sim = Simulator({"72B": qwen25("72B")}, HARDWARE)
+    cl = ClusterState((("A100-40G", 8),))
+    wl = [Workload("72B", 1, 128, 128)]
+    ok, why = sim.plan_feasible(
+        Plan((ReplicaGroup("72B", "A100-40G", 1, 1, 1),)), cl, wl)
+    assert not ok and "OOM" in why
+    ok, _ = sim.plan_feasible(
+        Plan((ReplicaGroup("72B", "A100-40G", 1, 1, 1, pp=8),)), cl, wl)
+    assert ok
+
+
+def test_apply_replica_pp_widens_when_devices_allow():
+    from repro.core import schedulers
+    from repro.core.plan import Ctx
+
+    sim = _sim()
+    cl = ClusterState((("H100-80G", 8),))
+    ctx = Ctx(time=0.0, timestamp_idx=0,
+              workloads=[Workload("7B", 4, 128, 128)], cluster=cl,
+              current_plan=None, models=sim.models, hardware=HARDWARE,
+              simulator=sim)
+    base = Plan((ReplicaGroup("7B", "H100-80G", 2, 4, 1),))
+    deep = schedulers.apply_replica_pp(base, ctx, 2, "rear-light")
+    (g,) = deep.groups
+    assert g.pp == 2 and g.stage_cuts == default_stage_cuts(28, 2,
+                                                            "rear-light")
+    assert sim.plan_feasible(deep, cl, ctx.workloads)[0]
+    # not enough devices: tp=2 count=2 uses 4, pp=4 would need 16 -> no-op
+    tight = Plan((ReplicaGroup("7B", "H100-80G", 2, 4, 2),))
+    assert schedulers.apply_replica_pp(tight, ctx, 4) == tight
+
+
+# --------------------------------------------------------------------------- #
+# single-device PipelinedEngine: parity, re-cut, pp<->plain migration
+# --------------------------------------------------------------------------- #
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(),
+                              dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _drain(eng, prompts):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=list(p), max_new_tokens=NEW))
+    return {d.request.rid: list(d.generated)
+            for d in eng.run_until_drained()}
+
+
+def _prompts(cfg, n=2, length=9):
+    v = cfg.vocab_size
+    return [[(11 * i + 5 * j) % (v - 1) + 1 for j in range(length)]
+            for i in range(n)]
+
+
+def test_pipelined_engine_token_parity(setup):
+    cfg, params = setup
+    prompts = _prompts(cfg)
+    ref = _drain(Engine(cfg, params, n_slots=2, max_seq_len=MAX_SEQ), prompts)
+    for pp in (2, 4):
+        eng = PipelinedEngine(cfg, params,
+                              default_stage_cuts(cfg.n_layers, pp),
+                              n_slots=2, max_seq_len=MAX_SEQ)
+        assert eng.pp == pp
+        assert _drain(eng, prompts) == ref
+
+
+def test_pipelined_engine_rejects_bad_cuts(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError):
+        PipelinedEngine(cfg, params, (0,), n_slots=1, max_seq_len=MAX_SEQ)
+    with pytest.raises(ValueError):
+        PipelinedEngine(cfg, params, (), n_slots=1, max_seq_len=MAX_SEQ)
+
+
+def test_mid_decode_stage_recut_token_identity(setup):
+    """pp=2 → pp=4 re-cut mid-decode: the per-stage wire states reassemble
+    into the full per-layer format, re-slice at the new boundaries, and the
+    request finishes token-identical with nothing dropped."""
+    cfg, params = setup
+    prompt = _prompts(cfg, n=1)[0]
+    ref = _drain(Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ),
+                 [prompt])[0]
+    src = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, 2),
+                          n_slots=1, max_seq_len=MAX_SEQ)
+    src.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=NEW))
+    for _ in range(3):
+        src.step()
+    assert src.active
+    (slot,) = src.active
+    head = list(src.active[slot].generated)
+    export = src.export_slot(slot)
+    assert not src.active
+    dst = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, 4),
+                          n_slots=1, max_seq_len=MAX_SEQ)
+    assert dst.install_active(export)
+    full = list(dst.run_until_drained()[0].generated)
+    assert full[:len(head)] == head and full == ref
+
+
+def test_pp_to_plain_and_back_migration(setup):
+    """The pipelined wire format is byte-compatible with the monolithic one:
+    pp=2 → plain → pp=2 round-trips an in-flight request exactly."""
+    cfg, params = setup
+    prompt = _prompts(cfg, n=1)[0]
+    ref = _drain(Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ),
+                 [prompt])[0]
+    src = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, 2),
+                          n_slots=1, max_seq_len=MAX_SEQ)
+    src.submit(Request(rid=0, prompt=list(prompt), max_new_tokens=NEW))
+    for _ in range(3):
+        src.step()
+    export = src.export_slot(min(src.active))
+    mid = Engine(cfg, params, n_slots=1, max_seq_len=MAX_SEQ)
+    assert mid.install_active(export)
+    mid.step()
+    export2 = mid.export_slot(min(mid.active))
+    dst = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, 2),
+                          n_slots=1, max_seq_len=MAX_SEQ)
+    assert dst.install_active(export2)
+    full = list(dst.run_until_drained()[0].generated)
+    assert full == ref
+
+
+def test_engine_for_group_builds_pipelined_without_allocator(setup):
+    cfg, params = setup
+    from repro.serving.sharded import engine_for_group
+
+    g = ReplicaGroup("m", "H100-80G", 1, 2, 1, pp=2)
+    eng = engine_for_group(cfg, params, g, None, n_slots=2,
+                           max_seq_len=MAX_SEQ)
+    assert isinstance(eng, PipelinedEngine) and eng.pp == 2
+    prompts = _prompts(cfg)
+    ref = _drain(Engine(cfg, params, n_slots=2, max_seq_len=MAX_SEQ), prompts)
+    assert _drain(eng, prompts) == ref

@@ -116,9 +116,10 @@ GOLDEN_GENOME_LINE = GENOME_PREFIX + (
     '"migration_keep_threshold": 0.0, "migration_mode": "drain", '
     '"min_interval": 1, "preempt": false, "priority_kind": "sjf", '
     '"reconfig_penalty": 0.0, "recovery_mode": "salvage", '
-    '"replica_dp": 1, '
+    '"replica_dp": 1, "replica_pp": 1, '
     '"retry_budget": 3, "scheduler": "greedy", "shift_threshold": 0.3, '
-    '"slo_ttft_s": 2.0, "straggler_factor": 0.0, "time_budget": 2.0, '
+    '"slo_ttft_s": 2.0, "stage_balance": "even", '
+    '"straggler_factor": 0.0, "time_budget": 2.0, '
     '"tp_floor_large": 0, "trigger_kind": "always", "weighted_obj": false}')
 
 

@@ -3,8 +3,10 @@
 ``repro.launch.sharded_check`` forces 8 host devices via XLA_FLAGS *before*
 importing jax, which cannot be done inside an already-initialised pytest
 process — so the whole ladder (dense TP parity, TP×DP, expert-parallel
-mixtral, cross-TP live migration, pool failover with submesh reclaim) runs
-as one subprocess and this test asserts its verdict."""
+mixtral, cross-TP live migration, pool failover with submesh reclaim, the
+pipeline ladder — pp=2 parity, pp=2×tp=2, mid-decode pp=2→pp=4 stage
+re-cut, pp→tp reshape — and fragmented-free-set allocation) runs as one
+subprocess and this test asserts its verdict."""
 import os
 import subprocess
 import sys
@@ -25,3 +27,8 @@ def test_sharded_check_subprocess():
     tail = (proc.stdout + proc.stderr)[-4000:]
     assert proc.returncode == 0, tail
     assert "sharded_check: all checks passed" in proc.stdout, tail
+    # the pipeline ladder rows must each have actually run
+    assert "PASS pipeline parity qwen2-1.5b pp=2 tp=1" in proc.stdout, tail
+    assert "PASS pipeline parity qwen2-1.5b pp=2 tp=2" in proc.stdout, tail
+    assert "PASS stage re-cut qwen2-1.5b pp=2->pp=4" in proc.stdout, tail
+    assert "PASS fragmented alloc" in proc.stdout, tail
