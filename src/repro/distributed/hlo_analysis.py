@@ -404,3 +404,34 @@ def stage_handoff_s(z, g, pp: int, batch: int, seq: int = 1) -> float:
     tax that keeps shadow ranking from preferring pp when one contiguous
     submesh (pure TP) is actually available."""
     return stage_activation_bytes_per_token(z, pp) * batch * seq / g.intra_bw
+
+
+def fused_paged_supported(z, tp: int) -> bool:
+    """Analytic counterpart of the engines' fused paged flash-decode gate
+    (``serving.sharded.fused_paged_unsupported_reason``): the shard_map
+    wrapper needs KV-head counts divisible by tp.  ModelSpec carries no
+    softcap/MLA capability bits, so this covers the *sharding* half of the
+    gate — the half that varies with the (tp, dp, pp) shape being priced;
+    kernel-capability gaps are shape-invariant and cancel in ranking."""
+    kv = getattr(z, "n_kv_heads", 0) or 0
+    if kv <= 0:
+        return False
+    return kv % max(tp, 1) == 0
+
+
+def unfused_paged_decode_overhead_s(z, g, tp: int, batch: int,
+                                    kv_tokens: int) -> float:
+    """Extra HBM time per decode step when paged decode cannot run fused.
+
+    The unfused path gathers the page pool into contiguous (B, S, Hkv, D)
+    K and V copies per layer — materialised (written) then read by the
+    attention matmuls, while the fused kernel streams pages once.  Per
+    step that is 2 (K,V) · 2 (write + re-read) extra passes over
+    ``batch · kv_tokens`` tokens' per-layer KV bytes, split across the
+    effective tp shards' aggregate HBM bandwidth."""
+    kv = getattr(z, "n_kv_heads", 0) or 0
+    if kv <= 0:                       # no per-head KV cache to gather
+        return 0.0
+    eff = effective_tp(z, tp)
+    per_tok = z.n_layers * kv * z.d_head * z.dtype_bytes
+    return 2.0 * 2.0 * batch * kv_tokens * per_tok / (eff * g.hbm_bw)

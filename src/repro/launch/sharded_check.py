@@ -23,7 +23,14 @@ safe):
   6. fragment tolerance: after interleaved releases leave the free set as
      two disjoint islands, a (1, 4) alloc still succeeds (no spurious
      SubmeshOversubscribed) and a pp=2 × tp=2 replica built ACROSS the
-     fragments is token-identical.
+     fragments is token-identical;
+  7. the sharded-paged ladder: tp=2 FUSED shard_map paged flash-decode vs
+     the unfused paged gather vs the contiguous cache (all token-identical),
+     and the tp=4 kv-head-indivisible case falls back unfused WITH a
+     recorded ShardingDecision fallback;
+  8. per-stage page pools: a pp=2 replica serves from lockstep stage pools
+     with cross-request prefix hits and zero leaked pages, and paged slot
+     migration (tp=2 → tp=4, pp=2 → plain) round-trips leak-free.
 """
 import os
 
@@ -273,6 +280,131 @@ def check_fragmented_alloc(arch: str) -> None:
     print(f"PASS fragmented alloc {arch} (islands={frags})")
 
 
+def check_sharded_paged_kernel(arch: str) -> None:
+    """The sharded-paged parity ladder: under tp=2 the FUSED shard_map
+    Pallas kernel, the unfused paged gather, and the contiguous cache must
+    all be token-identical.  Under tp=4 the KV heads (2) do not divide, so
+    the engine must fall back to the unfused path AND record the downgrade
+    in its ShardingDecision — no silent global disable."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg)
+    kw = dict(n_slots=2, max_seq_len=MAX_SEQ)
+    ref = _drain(Engine(cfg, params, paged=False, **kw), prompts)
+
+    alloc = SubmeshAllocator()
+    fused = ShardedEngine(cfg, params, alloc.alloc((1, 2)), allocator=alloc,
+                          use_paged_kernel=True, **kw)
+    assert fused.paged and fused.paged_kernel_fused, \
+        "tp=2 should run the fused shard_map paged kernel"
+    assert fused._paged_shard_flag is not None
+    got_fused = _drain(fused, prompts)
+    fused.release_devices()
+    assert got_fused == ref, (f"{arch} tp=2 fused paged diverges\n"
+                              f"ref={ref}\ngot={got_fused}")
+
+    unfused = ShardedEngine(cfg, params, alloc.alloc((1, 2)),
+                            allocator=alloc, use_paged_kernel=False, **kw)
+    got_unfused = _drain(unfused, prompts)
+    unfused.release_devices()
+    assert got_unfused == ref, (f"{arch} tp=2 unfused paged diverges\n"
+                                f"ref={ref}\ngot={got_unfused}")
+    print(f"PASS sharded paged kernel {arch} tp=2 "
+          f"(fused == unfused == contiguous)")
+
+    wide = ShardedEngine(cfg, params, alloc.alloc((1, 4)), allocator=alloc,
+                         use_paged_kernel=True, **kw)
+    assert not wide.paged_kernel_fused, \
+        "kv heads don't divide tp=4: fused kernel must be off"
+    recs = [f for f in wide.decision.fallbacks if "paged_kernel" in f.path]
+    assert recs and recs[0].axis_size == 4, \
+        f"paged-kernel fallback not recorded: {wide.decision.fallbacks}"
+    got_wide = _drain(wide, prompts)
+    wide.release_devices()
+    assert got_wide == ref, (f"{arch} tp=4 fallback paged diverges\n"
+                             f"ref={ref}\ngot={got_wide}")
+    assert alloc.free_devices == alloc.total_devices, "submesh leaked"
+    print(f"PASS paged kernel fallback {arch} tp=4 (recorded, unfused parity)")
+
+
+def check_pipelined_paged_prefix(arch: str, pp: int = 2) -> None:
+    """Per-stage page pools under pp: a repeated shared-prefix prompt must
+    hit every stage's prefix trie (lockstep), skip prefill work, stay
+    token-identical, and leak zero pages at teardown."""
+    cfg, params = _setup(arch)
+    prompts = _prompts(cfg, n=2)
+    shared = prompts[0][:8]
+    prompts = [shared + p[8:] for p in prompts]     # page-aligned overlap
+    kw = dict(n_slots=2, max_seq_len=MAX_SEQ, page_size=4)
+    ref = _drain(Engine(cfg, params, paged=False, n_slots=2,
+                        max_seq_len=MAX_SEQ), prompts)
+
+    alloc = SubmeshAllocator()
+    eng = PipelinedEngine(cfg, params, default_stage_cuts(cfg.n_layers, pp),
+                          stage_meshes=alloc.alloc_stages(pp, (1, 2)),
+                          allocator=alloc, **kw)
+    assert eng.paged, "pipelined engines must default to the paged pool now"
+    got = _drain(eng, prompts)
+    assert got == ref, (f"{arch} pp={pp} paged diverges\n"
+                        f"ref={ref}\ngot={got}")
+    again = _drain(eng, prompts)
+    assert again == ref
+    hits = eng.prefix_index.hits
+    assert hits >= 1, "second round should hit the per-stage prefix tries"
+    leaked = eng.release_all_pages()
+    assert leaked == 0, f"{leaked} pages leaked from the staged pools"
+    eng.release_devices()
+    assert alloc.free_devices == alloc.total_devices, "stage submesh leaked"
+    print(f"PASS pipelined paged prefix {arch} pp={pp} "
+          f"(hits={hits}, leaked=0)")
+
+
+def check_paged_migration(arch: str) -> None:
+    """Paged slot migration across parallelism shapes: tp=2 → tp=4 and
+    pp=2 → plain, both mid-decode through the contiguous wire format, both
+    token-identical with zero pages leaked on either side."""
+    cfg, params = _setup(arch)
+    prompt = _prompts(cfg, n=1, length=10)[0]
+    kw = dict(n_slots=1, max_seq_len=MAX_SEQ, page_size=4)
+    ref = _drain(Engine(cfg, params, **kw), [prompt])[0]
+
+    for label in ("tp2->tp4", "pp2->plain"):
+        alloc = SubmeshAllocator()
+        if label == "tp2->tp4":
+            src = ShardedEngine(cfg, params, alloc.alloc((1, 2)),
+                                allocator=alloc, use_paged_kernel=True, **kw)
+        else:
+            src = PipelinedEngine(cfg, params,
+                                  default_stage_cuts(cfg.n_layers, 2),
+                                  stage_meshes=alloc.alloc_stages(2, (1, 2)),
+                                  allocator=alloc, **kw)
+        assert src.paged
+        src.submit(Request(rid=0, prompt=list(prompt),
+                           max_new_tokens=NEW_TOKENS))
+        for _ in range(3):
+            src.step()
+        assert src.active, "request finished before migration point"
+        (slot,) = src.active
+        head = list(src.active[slot].generated)
+        export = src.export_slot(slot)
+        assert src.release_all_pages() == 0, "source leaked pages"
+        src.release_devices()
+        if label == "tp2->tp4":
+            dst = ShardedEngine(cfg, params, alloc.alloc((1, 4)),
+                                allocator=alloc, **kw)
+        else:
+            dst = Engine(cfg, params, **kw)
+        assert dst.install_active(export), "paged install refused"
+        done = dst.run_until_drained()
+        full = list(done[0].generated)
+        assert full[:len(head)] == head and full == ref, (
+            f"{arch} {label}: paged migration diverges\n"
+            f"ref={ref}\ngot={full}")
+        assert dst.release_all_pages() == 0, "destination leaked pages"
+        dst.release_devices()
+        assert alloc.free_devices == alloc.total_devices, "submesh leaked"
+    print(f"PASS paged migration {arch} tp2->tp4, pp2->plain (leaked=0)")
+
+
 def main() -> int:
     n = len(jax.devices())
     assert n >= 8, f"need 8 forced host devices, got {n}"
@@ -285,6 +417,9 @@ def main() -> int:
     check_pipeline_parity("qwen2-1.5b", pp=2, tp=2)   # pp×tp = 2×2
     check_stage_recut("qwen2-1.5b")
     check_fragmented_alloc("qwen2-1.5b")
+    check_sharded_paged_kernel("qwen2-1.5b")
+    check_pipelined_paged_prefix("qwen2-1.5b", pp=2)
+    check_paged_migration("qwen2-1.5b")
     print("sharded_check: all checks passed")
     return 0
 

@@ -28,6 +28,11 @@ _FLAGS = {
     # None or {"mesh": jax.sharding.Mesh, "axis": str} — when set, the MoE
     # FFN runs under shard_map with the expert axis sharded on `axis`
     "ep_shard": None,
+    # fused paged flash-decode under sharding, set by sharded engines at
+    # trace time: None or {"mesh": jax.sharding.Mesh, "axis": str} — when
+    # set, the paged decode kernel runs under shard_map over the
+    # head-sharded page pool (KV heads split on `axis`, pages replicated)
+    "paged_shard": None,
 }
 
 

@@ -278,10 +278,19 @@ def paged_attention_fwd(p: Params, cfg: ModelConfig, x: jax.Array,
         v.reshape(B * C, Hkv, D)).reshape(P, page, Hkv, D)
 
     if use_kernel and C == 1 and cfg.attn_logit_softcap is None:
-        from repro.kernels.flash_decode.kernel import paged_flash_decode_kernel
-        out = paged_flash_decode_kernel(q[:, 0], new_kp, new_vp, ptab, lens,
-                                        window=window,
-                                        interpret=interpret)[:, None]
+        from repro.kernels.flash_decode import ops as fd_ops
+        shard = flags.get_flag("paged_shard")
+        if shard is not None:
+            # head-sharded pool: explicit shard_map (pallas_call has no
+            # GSPMD rule); each shard decodes its own KV-head slice
+            out = fd_ops.sharded_paged_flash_decode(
+                q[:, 0], new_kp, new_vp, ptab, lens, shard["mesh"],
+                axis=shard.get("axis", "model"), window=window,
+                interpret=interpret)[:, None]
+        else:
+            out = fd_ops.paged_flash_decode_head_slice(
+                q[:, 0], new_kp, new_vp, ptab, lens, 0, Hkv, window=window,
+                interpret=interpret)[:, None]
     else:
         S = ptab.shape[1] * page
         K = new_kp[ptab].reshape(B, S, Hkv, D)            # gather mapped pages

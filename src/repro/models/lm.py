@@ -723,6 +723,67 @@ def paged_step(params: Params, cfg: ModelConfig, cache: Params,
     return logits, new_cache
 
 
+def paged_stage_step(params: Params, cfg: ModelConfig, cache: Params,
+                     x: jax.Array, pos2: jax.Array, ptab: jax.Array,
+                     active: jax.Array, *, page_size: int, first: bool,
+                     last: bool, use_kernel: bool = False,
+                     interpret: bool = True) -> Tuple[jax.Array, Params]:
+    """Paged forward over ONE pipeline stage's layer slice.
+
+    ``x`` is int32 tokens (B, C) on the first stage and the previous stage's
+    hidden state (B, C, D) otherwise; ``cache`` holds the stage's layer
+    slice of the paged pool (leading layer axis, pages shared engine-wide
+    through the lockstep per-stage pools).  The write-index prelude is
+    recomputed per stage from the same (pos2, ptab, active) scalars — it is
+    stage-invariant, so every stage scatters into the same page rows of its
+    own layer slice.  Composing the stages in order reproduces
+    :func:`paged_step` exactly — same scans, same reduction order.
+    """
+    B, C = pos2.shape
+    if first:
+        dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+        x = params["embed"][x].astype(dtype)
+        if cfg.local_global_every:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+
+    active = active.astype(bool)
+    lens = jnp.where(active, pos2[:, -1] + 1, 0).astype(jnp.int32)
+    phys = jnp.take_along_axis(ptab.astype(jnp.int32), pos2 // page_size,
+                               axis=1)
+    widx = phys * page_size + pos2 % page_size
+    widx = jnp.where(active[:, None], widx,
+                     jnp.arange(C, dtype=jnp.int32)[None, :] % page_size)
+    window = paged_window(cfg)
+
+    if cfg.mla is not None:
+        def body(h, xs):
+            lp, ckvp = xs
+            h, (c2,) = _paged_decoder_layer_fwd(
+                lp, cfg, h, pos2, None, (ckvp,), ptab, lens, widx,
+                use_kernel=False, interpret=interpret)
+            return h, c2
+        x, CKVP = jax.lax.scan(body, x, (params["layers"], cache["ckvp"]))
+        new_cache = {"ckvp": CKVP}
+    else:
+        def body(h, xs):
+            lp, kp, vp = xs
+            h, kv = _paged_decoder_layer_fwd(
+                lp, cfg, h, pos2, window, (kp, vp), ptab, lens, widx,
+                use_kernel=use_kernel, interpret=interpret)
+            return h, kv
+        x, (KP, VP) = jax.lax.scan(body, x, (params["layers"],
+                                             cache["kp"], cache["vp"]))
+        new_cache = {"kp": KP, "vp": VP}
+
+    if not last:
+        return x, new_cache
+    x = rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)
+    return logits, new_cache
+
+
 def extract_paged_slot(cfg: ModelConfig, cache: Params, pages, position: int,
                        page_size: int) -> Params:
     """Gather one request's pages into the *contiguous* extract format

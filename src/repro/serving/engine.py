@@ -650,9 +650,7 @@ class Engine(RequestSchedulingMixin):
         if self.paged:
             # page-granular export in the CONTIGUOUS extract format: the
             # target may be paged or not — one wire format either way
-            cache = (lm.extract_paged_slot(self.cfg, self.cache,
-                                           self._slot_pages[slot],
-                                           st.position, self.page_size)
+            cache = (self._extract_paged_slot_state(slot, st.position)
                      if with_state else None)
             self._release_pages(slot, st)
         else:
@@ -669,6 +667,21 @@ class Engine(RequestSchedulingMixin):
         """Contiguous-path slot install; returns the new cache pytree.
         The pipelined override slices ``state`` at its stage boundaries."""
         return lm.install_slot(self.cfg, self.cache, slot, state, position)
+
+    def _extract_paged_slot_state(self, slot: int, position: int):
+        """Paged slot extract into the contiguous wire format — overridden
+        by PipelinedEngine to concatenate per-stage pool slices (same page
+        ids in every stage, lockstep pools)."""
+        return lm.extract_paged_slot(self.cfg, self.cache,
+                                     self._slot_pages[slot], position,
+                                     self.page_size)
+
+    def _install_paged_slot_state(self, pages, state, position: int):
+        """Scatter a contiguous-format state into freshly-owned pages;
+        returns the new cache pytree.  The pipelined override slices
+        ``state`` at its stage boundaries and installs per stage."""
+        return lm.install_paged_slot(self.cfg, self.cache, pages, state,
+                                     position, self.page_size)
 
     def export_active(self, with_state: bool = True) -> List[SlotExport]:
         """Export every in-flight request (lowest slot first)."""
@@ -723,8 +736,8 @@ class Engine(RequestSchedulingMixin):
                     pages.append(kvcache.TRASH_PAGE)
                 else:
                     pages.append(self._alloc_page())
-            cache = lm.install_paged_slot(self.cfg, self.cache, pages,
-                                          export.cache, position, page)
+            cache = self._install_paged_slot_state(pages, export.cache,
+                                                   position)
         except (lm.SlotMigrationError, RuntimeError):
             for pid in pages:
                 self.page_pool.unref(pid)

@@ -54,12 +54,17 @@ class KVCacheCtx:
 
 
 class PagePool:
-    """Refcounted allocator over physical page ids 1..n_pages-1 (0 = trash)."""
+    """Refcounted allocator over physical page ids 1..n_pages-1 (0 = trash).
 
-    def __init__(self, n_pages: int):
+    ``layers`` is an optional (lo, hi) scope label naming the layer slice
+    this pool's pages back — ``None`` for an engine-global pool, a stage's
+    bounds when owned by a :class:`StagedPagePool` member."""
+
+    def __init__(self, n_pages: int, layers: Optional[Tuple[int, int]] = None):
         if n_pages < 2:
             raise ValueError(f"pool needs >= 2 pages (1 is trash), got {n_pages}")
         self.n_pages = n_pages
+        self.layers = layers
         # LIFO over descending ids: allocation order (1, 2, ...) is
         # deterministic, which shadow replay and tests rely on
         self._free: List[int] = list(range(n_pages - 1, 0, -1))
@@ -134,8 +139,10 @@ class PrefixIndex:
     anyway, so leaves-first keeps the structure consistent).
     """
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int,
+                 layers: Optional[Tuple[int, int]] = None):
         self.page_size = page_size
+        self.layers = layers
         self.root: Dict[Tuple[int, ...], PrefixNode] = {}
         self.nodes = 0
         self.hits = 0                    # requests that matched ≥ 1 block
@@ -215,3 +222,122 @@ class PrefixIndex:
             del level[node.key]
             self.nodes -= 1
         return node.page
+
+
+class StagedPagePool:
+    """Per-pipeline-stage page pools driven in lockstep.
+
+    A pipelined engine serves each layer slice from its own stage pool (on
+    a real deployment each stage host owns its pool's HBM), but a request's
+    logical block j must land on the SAME physical page id in every stage —
+    the page table is a single (B, n_ptab) array threaded through all stage
+    scans, and slot exports concatenate stage slices gathered by those ids.
+    This coordinator fans every alloc/ref/unref out to each stage's
+    :class:`PagePool` and asserts the ids agree, which they do by
+    construction (identical deterministic free lists, identical op
+    sequence).  It duck-types ``PagePool`` so all engine bookkeeping
+    (eviction, migration, leak accounting) is stage-count-agnostic.
+    """
+
+    def __init__(self, n_pages: int, stages: Sequence[Tuple[int, int]]):
+        if not stages:
+            raise ValueError("need >= 1 stage")
+        self.n_pages = n_pages
+        self.stage_pools: List[PagePool] = [
+            PagePool(n_pages, layers=(lo, hi)) for lo, hi in stages]
+
+    @property
+    def free_pages(self) -> int:
+        return self.stage_pools[0].free_pages
+
+    @property
+    def used_pages(self) -> int:
+        return self.stage_pools[0].used_pages
+
+    def alloc(self) -> Optional[int]:
+        pids = [p.alloc() for p in self.stage_pools]
+        if any(pid != pids[0] for pid in pids):  # pragma: no cover - lockstep
+            raise RuntimeError(f"stage pools diverged on alloc: {pids}")
+        return pids[0]
+
+    def ref(self, pid: int) -> None:
+        for p in self.stage_pools:
+            p.ref(pid)
+
+    def unref(self, pid: int) -> bool:
+        freed = [p.unref(pid) for p in self.stage_pools]
+        if any(f != freed[0] for f in freed):  # pragma: no cover - lockstep
+            raise RuntimeError(f"stage pools diverged on unref({pid})")
+        return freed[0]
+
+    def refcount(self, pid: int) -> int:
+        return self.stage_pools[0].refcount(pid)
+
+
+class StagedPrefixIndex:
+    """Per-stage radix tries driven in lockstep (see :class:`StagedPagePool`).
+
+    Each stage retains the same prefix blocks on the same page ids — the
+    trie structure is a pure function of the (prompt, pages) op sequence —
+    so ``match`` on any stage yields the same pages; stage 0 is canonical.
+    Eviction takes a stage-0 leaf and removes its *siblings* (the
+    same-position nodes in every other stage's trie), keeping the tries
+    identical.  Duck-types ``PrefixIndex`` for the engine and the evolvable
+    ``kv_cache`` policy hooks.
+    """
+
+    def __init__(self, page_size: int, stages: Sequence[Tuple[int, int]]):
+        if not stages:
+            raise ValueError("need >= 1 stage")
+        self.page_size = page_size
+        self.stage_tries: List[PrefixIndex] = [
+            PrefixIndex(page_size, layers=(lo, hi)) for lo, hi in stages]
+        # id(stage-0 node) -> same-position node in each later stage's trie
+        self._siblings: Dict[int, List[PrefixNode]] = {}
+
+    @property
+    def root(self):
+        return self.stage_tries[0].root
+
+    @property
+    def nodes(self) -> int:
+        return self.stage_tries[0].nodes
+
+    @property
+    def hits(self) -> int:
+        return self.stage_tries[0].hits
+
+    @property
+    def misses(self) -> int:
+        return self.stage_tries[0].misses
+
+    @property
+    def tokens_matched(self) -> int:
+        return self.stage_tries[0].tokens_matched
+
+    def match(self, prompt: Sequence[int], now: float
+              ) -> Tuple[List[int], int]:
+        outs = [t.match(prompt, now) for t in self.stage_tries]
+        if any(o != outs[0] for o in outs):  # pragma: no cover - lockstep
+            raise RuntimeError(f"stage tries diverged on match: {outs}")
+        return outs[0]
+
+    def insert(self, prompt: Sequence[int], pages: Sequence[int],
+               now: float) -> List[PrefixNode]:
+        per_stage = [t.insert(prompt, pages, now) for t in self.stage_tries]
+        for sib in zip(*per_stage):
+            if any(n.page != sib[0].page for n in sib):  # pragma: no cover
+                raise RuntimeError("stage tries diverged on insert")
+            self._siblings[id(sib[0])] = list(sib[1:])
+        return per_stage[0]
+
+    def leaves(self) -> List[PrefixNode]:
+        return self.stage_tries[0].leaves()
+
+    def remove(self, node: PrefixNode) -> int:
+        page = self.stage_tries[0].remove(node)
+        for trie, sib in zip(self.stage_tries[1:],
+                             self._siblings.pop(id(node), [])):
+            if trie.remove(sib) != page:  # pragma: no cover - lockstep
+                raise RuntimeError("stage tries diverged on remove")
+        return page

@@ -460,6 +460,16 @@ class ShadowBackend:
                 hand = hlo_analysis.stage_handoff_s(z, gpu, g.pp, 1)
                 k_p = k_p / g.pp / max(1.0 - bub, 1e-6) + hand
                 k_d = k_d + hand
+            if not hlo_analysis.fused_paged_supported(z, g.tp):
+                # honest paged decode: a tp that doesn't divide the KV
+                # heads forces the engine off the fused shard_map kernel
+                # onto the unfused gather (materialised contiguous K/V per
+                # layer, written then re-read) — priced per step at a
+                # nominal REF_PREFILL-token context so the evolved
+                # placement/kv domains see that choosing this tp costs a
+                # kernel downgrade, not just a sharding fallback.
+                k_d += hlo_analysis.unfused_paged_decode_overhead_s(
+                    z, gpu, g.tp, 1, self.REF_PREFILL)
             costs = ShadowCosts(prefill_per_token_s=k_p * self.time_scale,
                                 decode_step_s=k_d * self.time_scale,
                                 migrate_slot_s=0.5 * k_d * self.time_scale)

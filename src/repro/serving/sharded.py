@@ -66,7 +66,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec
 from repro.configs.base import ModelConfig
 from repro.core.plan import ReplicaGroup, default_stage_cuts, valid_stage_cuts
 from repro.distributed import sharding
+from repro.kernels.flash_decode.ops import default_interpret
 from repro.models import flags, lm
+from repro.serving import kvcache
 from repro.serving.engine import Engine
 
 
@@ -185,6 +187,26 @@ class SubmeshAllocator:
         self._free = sorted(self._free + entry[1], key=lambda d: d.id)
 
 
+def fused_paged_unsupported_reason(cfg: ModelConfig,
+                                   tp: int) -> Optional[str]:
+    """Why the fused paged flash-decode kernel cannot run for this
+    (config, tp) — ``None`` when it can.
+
+    The shard_map wrapper splits the pool's KV heads across ``tp`` shards,
+    so head counts must divide; the kernel itself has no softcap epilogue
+    and no MLA (latent-cache) variant.  Mirrors the engine's trace-time
+    gate in :func:`repro.models.layers.paged_attention_fwd` so the recorded
+    fallback and the actual execution path cannot drift apart.
+    """
+    if cfg.mla is not None:
+        return "mla"
+    if cfg.attn_logit_softcap is not None:
+        return "softcap"
+    if tp > 1 and cfg.n_kv_heads % tp != 0:
+        return "kv_heads"
+    return None
+
+
 class ShardedEngine(Engine):
     """An :class:`Engine` whose params/cache live sharded on a submesh.
 
@@ -209,10 +231,37 @@ class ShardedEngine(Engine):
         self.decision = sharding.sharding_decision(cfg, pol, params)
         self._ep_flag = ({"mesh": mesh, "axis": pol.tp_axis}
                          if pol.ep else None)
-        # pallas_call has no GSPMD partition rule: the fused paged-decode
-        # kernel cannot run inside a partitioned jit (the EP moe_gmm path
-        # wraps its kernel in an explicit shard_map instead)
-        kw.setdefault("use_paged_kernel", False)
+        # pallas_call has no GSPMD partition rule, so the fused paged-decode
+        # kernel cannot run inside a partitioned jit directly — but (like
+        # the EP moe_gmm path) it CAN run under an explicit shard_map over
+        # the head-sharded pool.  Enable it when the config supports that;
+        # otherwise force the unfused gather path and RECORD the downgrade
+        # in the ShardingDecision so costing consumers see it.
+        self._paged_shard_flag = None
+        self.paged_kernel_fused = False
+        paged_will = kw.get("paged")
+        if paged_will is None:
+            paged_will = lm.pageable(cfg)
+        if paged_will:
+            tp = mesh.shape[pol.tp_axis]
+            reason = fused_paged_unsupported_reason(cfg, tp)
+            if reason is None:
+                self.paged_kernel_fused = True
+                if tp > 1:
+                    self._paged_shard_flag = {"mesh": mesh,
+                                              "axis": pol.tp_axis}
+            else:
+                kw["use_paged_kernel"] = False
+                if reason == "kv_heads":
+                    # a real tp downgrade: the pool replicates its KV heads
+                    # and decode gathers — visible to tp_fallback_fraction
+                    self.decision.fallbacks.append(sharding.FallbackRecord(
+                        "paged_kernel", 3, cfg.n_kv_heads, pol.tp_axis, tp))
+                else:
+                    # kernel-capability gap (mla/softcap), not a sharding
+                    # downgrade: axis="" keeps tp_fallback_fraction honest
+                    self.decision.fallbacks.append(sharding.FallbackRecord(
+                        f"paged_kernel:{reason}", 3, cfg.n_kv_heads, "", tp))
         super().__init__(cfg, params, **kw)
         self.params = jax.device_put(
             params, sharding._ns(mesh, self.decision.param_specs))
@@ -220,12 +269,17 @@ class ShardedEngine(Engine):
                    else sharding.cache_pspecs)
         self._cache_ns = sharding._ns(mesh, spec_fn(cfg, pol, self.cache))
         self.cache = jax.device_put(self.cache, self._cache_ns)
+        scope = {}
         if self._ep_flag is not None:
+            scope["ep_shard"] = self._ep_flag
+        if self.paged and self._paged_shard_flag is not None:
+            scope["paged_shard"] = self._paged_shard_flag
+        if scope:
             if self.paged:
-                self._paged_exec = self._with_ep(self._paged_exec)
+                self._paged_exec = self._with_flags(self._paged_exec, scope)
             else:
-                self._decode = self._with_ep(self._decode)
-                self._prefill = self._with_ep(self._prefill)
+                self._decode = self._with_flags(self._decode, scope)
+                self._prefill = self._with_flags(self._prefill, scope)
 
     # -------------------------------------------------------------- #
     @property
@@ -236,14 +290,13 @@ class ShardedEngine(Engine):
     def dp(self) -> int:
         return self.mesh.shape.get("data", 1)
 
-    def _with_ep(self, fn):
-        """Every call enters the ``ep_shard`` trace-time flag scope: the
-        flag only matters when the jitted closure first traces, but the
-        context entry is cheap and keying on it keeps retraces correct."""
-        flag = self._ep_flag
-
+    def _with_flags(self, fn, scope):
+        """Every call enters the given trace-time flag scope (``ep_shard``,
+        ``paged_shard``): the flags only matter when the jitted closure
+        first traces, but the context entry is cheap and keying on it keeps
+        retraces correct."""
         def run(*args):
-            with flags.scoped(ep_shard=flag):
+            with flags.scoped(**scope):
                 return fn(*args)
         return run
 
@@ -279,13 +332,17 @@ class PipelinedEngine(Engine):
     scans reproduces the monolithic forward's reduction order.
 
     Scheduling, slots, chunked prefill and migration all come from the base
-    engine unchanged: only the two jitted step closures are replaced by
-    Python stage loops (prefill additionally micro-chunks each prefill
-    chunk, see :meth:`_pipe_prefill`).  The paged KV pool is layer-
-    monolithic per engine, so pipelined replicas always run the contiguous
-    cache path; slot export/install reassembles / re-slices the full
-    per-layer wire format, so re-cutting stage boundaries (or moving
-    pp↔tp) migrates in-flight requests without dropping them.
+    engine unchanged: only the jitted step closures are replaced by Python
+    stage loops (prefill additionally micro-chunks each prefill chunk, see
+    :meth:`_pipe_prefill`).  Paged KV serves from PER-STAGE page pools:
+    each stage's cache is its layer slice of the paged pool, and the
+    host-side :class:`~repro.serving.kvcache.StagedPagePool` /
+    ``StagedPrefixIndex`` keep every stage's allocator and prefix trie in
+    lockstep, so one page table drives all stages and cross-request prefix
+    reuse works under pp.  Slot export/install reassembles / re-slices the
+    full per-layer wire format (contiguous OR paged), so re-cutting stage
+    boundaries (or moving pp↔tp, paged↔contiguous) migrates in-flight
+    requests without dropping them.
     """
 
     def __init__(self, cfg: ModelConfig, params,
@@ -310,10 +367,10 @@ class PipelinedEngine(Engine):
                 f"got {len(self.stage_meshes)} stage meshes for pp={pp}")
         self.allocator = allocator
         self.microbatches = pp if microbatches is None else int(microbatches)
-        # the paged pool is per-engine and layer-monolithic: pp replicas run
-        # the contiguous cache path (prefix reuse is a pp=1 feature for now)
-        kw["paged"] = False
-        kw.pop("use_paged_kernel", None)
+        # the base init builds the engine-global paged bookkeeping and a
+        # monolithic pool; _build_stages then slices the pool per stage and
+        # swaps the allocator/trie for their lockstep per-stage versions
+        self._use_paged_kernel_kw = kw.get("use_paged_kernel")
         super().__init__(cfg, params, **kw)
         self._build_stages(params)
 
@@ -338,9 +395,20 @@ class PipelinedEngine(Engine):
         cfg, pp = self.cfg, self.pp
         full_cache = self.cache
         self._stage_fns: List = []
-        self._stage_ep: List = []
+        self._stage_flags: List = []
         self._stage_ns: List = [None] * pp
         self.stage_decisions: List = [None] * pp
+        stage_tp = (self.stage_meshes[0].shape.get("model", 1)
+                    if self.stage_meshes else 1)
+        use_kernel = False
+        self.paged_kernel_fused = False
+        if self.paged:
+            reason = fused_paged_unsupported_reason(cfg, stage_tp)
+            if reason is None:
+                self.paged_kernel_fused = True
+                use_kernel = self._use_paged_kernel_kw
+                if use_kernel is None:
+                    use_kernel = jax.default_backend() == "tpu"
         stage_params, stage_caches = [], []
         for i in range(pp):
             lo, hi = self._bounds[i], self._bounds[i + 1]
@@ -348,27 +416,58 @@ class PipelinedEngine(Engine):
             sp = lm.slice_stage_params(cfg, params, lo, hi, first, last)
             sc = lm.slice_stage_cache(full_cache, lo, hi)
             mesh = self.stage_meshes[i] if self.stage_meshes else None
+            scope = {}
             if mesh is not None:
                 pol = dataclasses.replace(sharding.make_policy(mesh, cfg),
                                           fsdp_axis=None)
                 decision = sharding.sharding_decision(cfg, pol, sp)
+                if self.paged and not self.paged_kernel_fused:
+                    # same record the single-submesh engine keeps: the
+                    # unfused downgrade must be visible to costing
+                    reason = fused_paged_unsupported_reason(cfg, stage_tp)
+                    axis = pol.tp_axis if reason == "kv_heads" else ""
+                    path = ("paged_kernel" if reason == "kv_heads"
+                            else f"paged_kernel:{reason}")
+                    decision.fallbacks.append(sharding.FallbackRecord(
+                        path, 3, cfg.n_kv_heads, axis, stage_tp))
                 self.stage_decisions[i] = decision
                 sp = jax.device_put(
                     sp, sharding._ns(mesh, decision.param_specs))
-                ns = sharding._ns(mesh, sharding.cache_pspecs(cfg, pol, sc))
+                spec_fn = (sharding.paged_cache_pspecs if self.paged
+                           else sharding.cache_pspecs)
+                ns = sharding._ns(mesh, spec_fn(cfg, pol, sc))
                 sc = jax.device_put(sc, ns)
                 self._stage_ns[i] = ns
-                self._stage_ep.append({"mesh": mesh, "axis": pol.tp_axis}
-                                      if pol.ep else None)
-            else:
-                self._stage_ep.append(None)
+                if pol.ep:
+                    scope["ep_shard"] = {"mesh": mesh, "axis": pol.tp_axis}
+                if (self.paged and self.paged_kernel_fused
+                        and use_kernel and stage_tp > 1):
+                    scope["paged_shard"] = {"mesh": mesh,
+                                            "axis": pol.tp_axis}
+            self._stage_flags.append(scope or None)
             stage_params.append(sp)
             stage_caches.append(sc)
-            self._stage_fns.append(self._make_stage_fn(first, last))
+            if self.paged:
+                self._stage_fns.append(self._make_paged_stage_fn(
+                    first, last, bool(use_kernel)))
+            else:
+                self._stage_fns.append(self._make_stage_fn(first, last))
         self.params = stage_params
         self.cache = stage_caches
-        self._decode = self._pipe_decode
-        self._prefill = self._pipe_prefill
+        if self.paged:
+            # swap the monolithic host bookkeeping for per-stage lockstep
+            # pools/tries over the stages' layer slices; page ids and trie
+            # contents stay engine-wide consistent by construction
+            stages = [(self._bounds[i], self._bounds[i + 1])
+                      for i in range(pp)]
+            self.page_pool = kvcache.StagedPagePool(self.page_pool.n_pages,
+                                                    stages)
+            self.prefix_index = kvcache.StagedPrefixIndex(self.page_size,
+                                                          stages)
+            self._paged_exec = self._pipe_paged_exec
+        else:
+            self._decode = self._pipe_decode
+            self._prefill = self._pipe_prefill
 
     def _make_stage_fn(self, first: bool, last: bool):
         cfg = self.cfg
@@ -378,6 +477,21 @@ class PipelinedEngine(Engine):
             out, c2 = lm.stage_step(p, cfg, c, x, pos2,
                                     first=first, last=last)
             c2 = lm.mask_cache_update(cfg, c, c2, active)
+            if last:
+                out = jnp.argmax(out[:, -1, :], axis=-1).astype(jnp.int32)
+            return out, c2
+        return jax.jit(_fn)
+
+    def _make_paged_stage_fn(self, first: bool, last: bool,
+                             use_kernel: bool):
+        cfg, page_size = self.cfg, self.page_size
+        interp = default_interpret()
+
+        def _fn(p, c, x, pos2, ptab, act):
+            out, c2 = lm.paged_stage_step(
+                p, cfg, c, x, pos2, ptab, act, page_size=page_size,
+                first=first, last=last, use_kernel=use_kernel,
+                interpret=interp)
             if last:
                 out = jnp.argmax(out[:, -1, :], axis=-1).astype(jnp.int32)
             return out, c2
@@ -393,14 +507,52 @@ class PipelinedEngine(Engine):
             if i and self.stage_meshes is not None:
                 x = jax.device_put(
                     x, NamedSharding(self.stage_meshes[i], PartitionSpec()))
-            ep = self._stage_ep[i]
-            if ep is not None:
-                with flags.scoped(ep_shard=ep):
+            scope = self._stage_flags[i]
+            if scope is not None:
+                with flags.scoped(**scope):
                     x, c2 = fn(params[i], caches[i], x, pos2, active, reset)
             else:
                 x, c2 = fn(params[i], caches[i], x, pos2, active, reset)
             new.append(c2)
         return x, new
+
+    def _run_paged_stages(self, params, caches, x, pos2, ptab, act):
+        """One micro-chunk through every stage's paged layer slice.  Same
+        hand-off contract as :meth:`_run_stages`; the page table and active
+        mask ride along replicated (host NumPy), and every stage recomputes
+        the identical write indices from them."""
+        new = []
+        for i, fn in enumerate(self._stage_fns):
+            if i and self.stage_meshes is not None:
+                x = jax.device_put(
+                    x, NamedSharding(self.stage_meshes[i], PartitionSpec()))
+            scope = self._stage_flags[i]
+            if scope is not None:
+                with flags.scoped(**scope):
+                    x, c2 = fn(params[i], caches[i], x, pos2, ptab, act)
+            else:
+                x, c2 = fn(params[i], caches[i], x, pos2, ptab, act)
+            new.append(c2)
+        return x, new
+
+    def _pipe_paged_exec(self, params, caches, tokens, positions, ptab, act):
+        """Drop-in for the base engine's jitted ``_paged_exec`` against the
+        stage lists: decode (C == 1) is a single pass; prefill chunks are
+        micro-chunked like :meth:`_pipe_prefill` (sequential micro-chunks
+        against the pool are exactly chunked prefill — no reset/rollback
+        needed, the trash page isolates inactive lanes)."""
+        B, C = tokens.shape
+        mb = max(min(self.microbatches, C), 1)
+        if mb > 1 and C % mb == 0:
+            w = C // mb
+            spans = [(j * w, (j + 1) * w) for j in range(mb)]
+        else:
+            spans = [(0, C)]
+        out = None
+        for s, e in spans:
+            out, caches = self._run_paged_stages(
+                params, caches, tokens[:, s:e], positions[:, s:e], ptab, act)
+        return out, caches
 
     def _pipe_decode(self, params, caches, tokens, positions, active, reset):
         """Decode hands ONE token's hidden state stage to stage — a decode
@@ -446,6 +598,24 @@ class PipelinedEngine(Engine):
             lo, hi = self._bounds[i], self._bounds[i + 1]
             part = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], state)
             new.append(lm.install_slot(self.cfg, c, slot, part, position))
+        return new
+
+    def _extract_paged_slot_state(self, slot: int, position: int):
+        # lockstep pools ⇒ the slot's page ids are valid in every stage's
+        # pool slice; concatenating the per-stage gathers reproduces the
+        # monolithic engine's wire format byte-for-byte
+        return lm.concat_stage_states(
+            [lm.extract_paged_slot(self.cfg, c, self._slot_pages[slot],
+                                   position, self.page_size)
+             for c in self.cache])
+
+    def _install_paged_slot_state(self, pages, state, position: int):
+        new = []
+        for i, c in enumerate(self.cache):
+            lo, hi = self._bounds[i], self._bounds[i + 1]
+            part = jax.tree.map(lambda a, lo=lo, hi=hi: a[lo:hi], state)
+            new.append(lm.install_paged_slot(self.cfg, c, pages, part,
+                                             position, self.page_size))
         return new
 
     def _adopt_cache(self, caches):

@@ -362,3 +362,97 @@ def test_shared_prefix_generator_is_deterministic_and_shaped():
         head = tuple(prompt[:32])
         assert tpl_of.setdefault(t, head) == head    # same template ⇒ same head
     assert len(tpl_of) == 2
+
+
+# --------------------------------------------------------------------------- #
+# head-slice kernel entry point (shared by shard_map body + single device)
+# --------------------------------------------------------------------------- #
+def test_head_slice_blocks_tile_the_full_kernel_output():
+    from repro.kernels.flash_decode import ops
+    B, H, Hkv, D, page, pps = 2, 8, 4, 16, 8, 4
+    n_pages = 1 + B * pps
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(7), 4)
+    q = jax.random.normal(k1, (B, H, D), jnp.float32)
+    kp = jax.random.normal(k2, (n_pages, page, Hkv, D), jnp.float32)
+    vp = jax.random.normal(k3, (n_pages, page, Hkv, D), jnp.float32)
+    ptab = jax.random.randint(k4, (B, pps), 1, n_pages).astype(jnp.int32)
+    kv_len = jnp.array([9, 27], jnp.int32)
+    full = ops.paged_flash_decode(q, kp, vp, ptab, kv_len)
+    G = H // Hkv
+    for tp in (2, 4):
+        width = Hkv // tp
+        parts = [ops.paged_flash_decode_head_slice(
+                     q, kp[:, :, i * width:(i + 1) * width],
+                     vp[:, :, i * width:(i + 1) * width],
+                     ptab, kv_len, i * width, Hkv, interpret=True)
+                 for i in range(tp)]
+        assert all(p.shape == (B, G * width, D) for p in parts)
+        tiled = jnp.concatenate(parts, axis=1)
+        assert jnp.max(jnp.abs(tiled - full)) == 0.0   # same kernel, same math
+
+
+def test_head_slice_rejects_indivisible_gqa_groups():
+    from repro.kernels.flash_decode import ops
+    q = jnp.zeros((1, 8, 16), jnp.float32)
+    kp = vp = jnp.zeros((3, 8, 3, 16), jnp.float32)
+    ptab = jnp.ones((1, 2), jnp.int32)
+    kv_len = jnp.array([4], jnp.int32)
+    with pytest.raises(ValueError, match="divisible"):
+        ops.paged_flash_decode_head_slice(q, kp, vp, ptab, kv_len, 0, 3)
+
+
+# --------------------------------------------------------------------------- #
+# per-stage lockstep pools/tries (PipelinedEngine paged bookkeeping)
+# --------------------------------------------------------------------------- #
+def test_staged_page_pool_keeps_stage_pools_in_lockstep():
+    pool = kvcache.StagedPagePool(6, [(0, 2), (2, 4)])
+    assert [p.layers for p in pool.stage_pools] == [(0, 2), (2, 4)]
+    a, b = pool.alloc(), pool.alloc()
+    assert (a, b) == (1, 2)                     # deterministic order
+    assert pool.used_pages == 2 and pool.free_pages == 3
+    pool.ref(a)
+    assert pool.refcount(a) == 2
+    assert all(p.refcount(a) == 2 for p in pool.stage_pools)
+    assert pool.unref(a) is False and pool.unref(a) is True
+    assert pool.unref(b) is True
+    assert pool.used_pages == 0
+    assert all(p.used_pages == 0 for p in pool.stage_pools)
+
+
+def test_staged_prefix_index_matches_and_evicts_across_stages():
+    idx = kvcache.StagedPrefixIndex(4, [(0, 2), (2, 4), (4, 6)])
+    prompt = list(range(12))
+    new = idx.insert(prompt, [5, 6, 7], now=1.0)
+    assert [n.page for n in new] == [5, 6, 7]
+    assert idx.nodes == 3
+    assert all(t.nodes == 3 for t in idx.stage_tries)
+    pages, matched = idx.match(prompt + [99], now=2.0)
+    assert pages == [5, 6, 7] and matched == 12
+    assert idx.hits == 1 and all(t.hits == 1 for t in idx.stage_tries)
+    leaf = idx.leaves()[0]
+    assert idx.remove(leaf) == 7
+    assert idx.nodes == 2 and all(t.nodes == 2 for t in idx.stage_tries)
+    # remaining chain still matches two blocks in every stage trie
+    pages, matched = idx.match(prompt + [99], now=3.0)
+    assert pages == [5, 6] and matched == 8
+
+
+def test_pipelined_engine_uses_staged_pools_and_prefix_reuse():
+    from repro.serving.sharded import PipelinedEngine
+    cfg, params = _zoo("qwen2-1.5b")
+    eng = PipelinedEngine(cfg, params, stage_cuts=(cfg.n_layers // 2,),
+                          n_slots=2, max_seq_len=48, page_size=4)
+    assert eng.paged
+    assert isinstance(eng.page_pool, kvcache.StagedPagePool)
+    assert isinstance(eng.prefix_index, kvcache.StagedPrefixIndex)
+    prompt = [(7 * j) % (cfg.vocab_size - 1) + 1 for j in range(16)]
+    outs = []
+    for _ in range(2):                 # second run must hit the prefix trie
+        eng.submit(Request(rid=len(outs), prompt=list(prompt),
+                           max_new_tokens=4))
+        while eng.step():
+            pass
+        outs.append(list(eng.finished[-1].generated))
+    assert outs[0] == outs[1]
+    assert eng.prefix_index.hits >= 1
+    assert eng.release_all_pages() == 0          # nothing leaked

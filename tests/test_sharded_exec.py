@@ -5,8 +5,11 @@ importing jax, which cannot be done inside an already-initialised pytest
 process — so the whole ladder (dense TP parity, TP×DP, expert-parallel
 mixtral, cross-TP live migration, pool failover with submesh reclaim, the
 pipeline ladder — pp=2 parity, pp=2×tp=2, mid-decode pp=2→pp=4 stage
-re-cut, pp→tp reshape — and fragmented-free-set allocation) runs as one
-subprocess and this test asserts its verdict."""
+re-cut, pp→tp reshape — fragmented-free-set allocation, the sharded-paged
+ladder — tp=2 fused shard_map kernel vs unfused vs contiguous, tp=4
+recorded fallback — per-stage page pools with prefix hits, and leak-free
+paged migration) runs as one subprocess and this test asserts its
+verdict."""
 import os
 import subprocess
 import sys
@@ -32,3 +35,11 @@ def test_sharded_check_subprocess():
     assert "PASS pipeline parity qwen2-1.5b pp=2 tp=2" in proc.stdout, tail
     assert "PASS stage re-cut qwen2-1.5b pp=2->pp=4" in proc.stdout, tail
     assert "PASS fragmented alloc" in proc.stdout, tail
+    # the sharded-paged ladder rows (fused shard_map kernel + per-stage
+    # page pools + leak-free paged migration) must each have actually run
+    assert ("PASS sharded paged kernel qwen2-1.5b tp=2 "
+            "(fused == unfused == contiguous)") in proc.stdout, tail
+    assert "PASS paged kernel fallback qwen2-1.5b tp=4" in proc.stdout, tail
+    assert "PASS pipelined paged prefix qwen2-1.5b pp=2" in proc.stdout, tail
+    assert ("PASS paged migration qwen2-1.5b tp2->tp4, pp2->plain "
+            "(leaked=0)") in proc.stdout, tail
